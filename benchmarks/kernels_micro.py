@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks (CPU wall time of the jnp reference path +
+Pallas interpret-mode correctness deltas).
+
+Real Pallas timings need a TPU; here ``us_per_call`` is the jitted jnp ref
+on CPU (a lower bound sanity signal) and ``derived`` carries the max
+abs error of the Pallas kernel vs the oracle — the correctness half of the
+kernel story that CAN be validated in this container.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+from .common import emit, time_call
+
+
+def bench_conv2d():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (8, 32, 32, 16))
+    w = jax.random.normal(k2, (3, 3, 16, 32))
+    us = time_call(jax.jit(lambda a, b: ref.conv2d_ref(a, b)), x, w)
+    err = float(jnp.abs(conv2d_pallas(x[:1], w) -
+                        ref.conv2d_ref(x[:1], w)).max())
+    emit("kernel_conv2d_32x32x16x32", us, f"pallas_max_err={err:.2e}")
+
+
+def bench_flash():
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 8, 512, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 2, 512, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 2, 512, 64), jnp.bfloat16)
+    naive = jax.jit(lambda q_, k_, v_: ref.attention_ref(
+        q_.transpose(0, 2, 1, 3), k_.transpose(0, 2, 1, 3),
+        v_.transpose(0, 2, 1, 3), causal=True))
+    us = time_call(naive, q, k, v)
+    got = flash_attention_pallas(q[:1, :, :128], k[:1, :, :128],
+                                 v[:1, :, :128], causal=True)
+    want = ref.attention_ref(
+        q[:1, :, :128].transpose(0, 2, 1, 3),
+        k[:1, :, :128].transpose(0, 2, 1, 3),
+        v[:1, :, :128].transpose(0, 2, 1, 3),
+        causal=True).transpose(0, 2, 1, 3)
+    err = float(jnp.abs(got.astype(jnp.float32) -
+                        want.astype(jnp.float32)).max())
+    emit("kernel_flash_gqa_512", us, f"pallas_max_err={err:.2e}")
+
+
+def bench_rmsnorm():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (4096, 1024))
+    s = jnp.ones((1024,))
+    us = time_call(jax.jit(lambda a, b: ref.rmsnorm_ref(a, b)), x, s)
+    err = float(jnp.abs(rmsnorm_pallas(x[:256], s) -
+                        ref.rmsnorm_ref(x[:256], s)).max())
+    emit("kernel_rmsnorm_4096x1024", us, f"pallas_max_err={err:.2e}")
+
+
+def run_all():
+    bench_conv2d()
+    bench_flash()
+    bench_rmsnorm()

@@ -1,0 +1,77 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Emits one CSV row per (arch x shape x mesh): the three roofline terms in
+ms, the dominant bottleneck, the useful-FLOP fraction, and per-device HBM.
+The EXPERIMENTS.md §Roofline table is generated from this output
+(``python -m benchmarks.roofline_report --markdown``).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from .common import emit
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load_results(mesh_filter: str = "", tag: str = ""):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(fn)[:-5]
+        parts = base.split("__")
+        file_tag = parts[3] if len(parts) > 3 else ""
+        if tag != file_tag:
+            continue
+        data = json.load(open(fn))
+        if mesh_filter and data["mesh"] != mesh_filter:
+            continue
+        if "roofline" not in data:
+            continue
+        rows.append(data)
+    return rows
+
+
+def run_all(mesh: str = "pod", tag: str = ""):
+    rows = load_results(mesh_filter=mesh, tag=tag)
+    if not rows:
+        emit(f"roofline_{mesh}", 0.0, "no_dryrun_artifacts_yet")
+        return
+    for d in rows:
+        r = d["roofline"]
+        bound_ms = max(r["compute_ms"], r["memory_ms"], r["collective_ms"])
+        emit(f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}",
+             bound_ms * 1e3,
+             f"bottleneck={r['bottleneck']};compute_ms={r['compute_ms']};"
+             f"memory_ms={r['memory_ms']};coll_ms={r['collective_ms']};"
+             f"useful={r['useful_frac']};hbm_GB={r['hbm_per_dev_GB']}")
+
+
+def markdown_table(mesh: str = "pod", tag: str = "") -> str:
+    rows = load_results(mesh_filter=mesh, tag=tag)
+    hdr = ("| arch | shape | chips | compute ms | memory ms | mem(flash) ms "
+           "| coll ms | bottleneck | useful frac | HBM/dev GB | compile s |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for d in sorted(rows, key=lambda d: (d["arch"], d["shape"])):
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['chips']} "
+            f"| {r['compute_ms']} | {r['memory_ms']} "
+            f"| {r.get('memory_flash_ms', '-')} | {r['collective_ms']} "
+            f"| **{r['bottleneck']}** | {r['useful_frac']} "
+            f"| {r['hbm_per_dev_GB']} | {d['compile_s']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if "--markdown" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--mesh") + 1] \
+            if "--mesh" in sys.argv else "pod"
+        tag = sys.argv[sys.argv.index("--tag") + 1] \
+            if "--tag" in sys.argv else ""
+        print(markdown_table(mesh, tag))
+    else:
+        run_all()

@@ -1,0 +1,21 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  * paper figures (Fig. 10-15, Table 1) — BPT-CNN reproduction metrics
+  * kernel micro-benchmarks — jnp ref timing + Pallas correctness
+  * roofline report — read from experiments/dryrun artifacts
+"""
+import sys
+
+
+def main() -> None:
+    from . import kernels_micro, paper_figures, roofline_report
+    print("name,us_per_call,derived")
+    paper_figures.run_all()
+    kernels_micro.run_all()
+    roofline_report.run_all(mesh="pod")
+    roofline_report.run_all(mesh="multipod")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the paper's pipeline in ~60 lines.
+
+Trains the paper's CNN (Table 2 scale, reduced images) on a heterogeneous
+virtual cluster with IDPA partitioning and the AGWU asynchronous parameter
+server, then compares against the synchronous SGWU strategy — reproducing
+the headline claim (accuracy parity, zero synchronisation wait) at demo
+scale.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bpt_trainer import BPTTrainer
+from repro.core.types import TrainConfig
+from repro.data.pipeline import IDPADataset
+from repro.data.synthetic import image_dataset
+from repro.models.cnn import CNNConfig, cnn_accuracy, cnn_loss, init_cnn
+
+
+def main():
+    # --- the paper's CNN (scaled to 16px for a CPU demo) ---
+    cfg = CNNConfig(name="quickstart", image_size=16, conv_layers=2,
+                    filters=8, fc_layers=2, fc_neurons=64)
+    xs, ys = image_dataset(2000, size=16, seed=0)
+    xe, ye = image_dataset(500, size=16, seed=42)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    eval_batch = {"images": jnp.asarray(xe), "labels": jnp.asarray(ye)}
+    eval_fn = jax.jit(lambda p: cnn_accuracy(p, eval_batch, cfg))
+
+    # --- a 4-node heterogeneous virtual cluster (speeds 1x..2.2x) ---
+    speeds = np.array([1.0, 1.3, 1.7, 2.2])
+    for strategy in ("sgwu", "agwu"):
+        ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=4,
+                         batches=3, frequencies=1.0 / speeds,
+                         partitioning="idpa", idpa_mode="balanced")
+        tc = TrainConfig(outer_strategy=strategy, outer_nodes=4,
+                         optimizer="adamw", learning_rate=2e-3,
+                         warmup_steps=10, total_steps=400, local_steps=4)
+        trainer = BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}),
+                             params, ds, tc, batch_size=64,
+                             eval_fn=eval_fn, speed_factors=speeds)
+        rep = trainer.train(rounds=10)
+        s = rep.summary()
+        print(f"{strategy.upper():5s} acc={s['final_acc']:.3f} "
+              f"virtual_makespan={s['makespan']:.2f}s "
+              f"sync_wait={s['sync_wait']:.2f}s comm={s['comm_MB']}MB "
+              f"allocation={rep.allocation}")
+    print("\nAGWU trains with zero synchronisation wait (the paper's point);"
+          "\nIDPA gave the fast nodes proportionally more samples.")
+
+
+if __name__ == "__main__":
+    main()

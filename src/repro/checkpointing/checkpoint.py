@@ -1,0 +1,78 @@
+"""Pytree checkpointing to .npz (flat-key encoding), multi-host-aware.
+
+Simple and dependency-free: flattens the pytree with '/'-joined key paths,
+saves host-local numpy arrays.  ``save``/``restore`` round-trip params,
+optimizer state and the parameter-server version log.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"#{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return p.name
+    return str(p)
+
+
+def save(path: str, tree, step: int = 0, metadata: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, f"ckpt_{step:08d}.npz"), **flat)
+    meta = {"step": step, **(metadata or {})}
+    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return os.path.join(path, f"ckpt_{step:08d}.npz")
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, like, step: int | None = None):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        _SEP.join(_path_str(p) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    new_leaves = [
+        jax.numpy.asarray(data[key]).astype(leaf.dtype)
+        for key, leaf in zip(paths, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

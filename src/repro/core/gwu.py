@@ -1,0 +1,90 @@
+"""Global Weight Updating strategies — SGWU (Eq. 7) and AGWU (Eq. 9-10).
+
+Both operate on arbitrary JAX pytrees so the same code path serves the
+paper's CNN and every assigned LLM architecture.  The update math is jitted;
+the versioning/bookkeeping lives in ``param_server.ParameterServer``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgwu_merge", "agwu_gamma", "agwu_update", "tree_sub", "tree_add_scaled"]
+
+
+def tree_sub(a, b):
+    """a - b, leafwise."""
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_add_scaled(base, delta, scale):
+    """base + scale * delta, leafwise (scale is a scalar)."""
+    return jax.tree_util.tree_map(lambda x, d: x + scale * d, base, delta)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _weighted_sum(stacked, weights):
+    """sum_j stacked[j] * weights[j] over leading axis, leafwise."""
+    def per_leaf(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * w, axis=0)
+    return jax.tree_util.tree_map(per_leaf, stacked)
+
+
+def sgwu_merge(local_weights: Sequence, accuracies: Sequence[float]):
+    """Eq. (7): W(i) = sum_j W_j(i-1) * Q_j / sum_k Q_k.
+
+    ``local_weights`` is a list of pytrees with identical structure.
+    """
+    if len(local_weights) == 0:
+        raise ValueError("need at least one local weight set")
+    if len(local_weights) != len(accuracies):
+        raise ValueError("one accuracy per local weight set")
+    q = jnp.asarray(accuracies, dtype=jnp.float32)
+    total = jnp.sum(q)
+    # guard: all-zero accuracies degrade to the uniform average
+    w = jnp.where(total > 0, q / jnp.maximum(total, 1e-12),
+                  jnp.full_like(q, 1.0 / len(accuracies)))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0),
+                                     *local_weights)
+    return _weighted_sum(stacked, w)
+
+
+def agwu_gamma(base_version: int, latest_version: int,
+               outstanding_versions: Sequence[int]) -> float:
+    """Eq. (9): time-attenuation factor.
+
+    gamma_j(k) = e^{k/(i-1)} / sum_{j'} e^{k'/(i-1)}
+
+    ``base_version`` is k (the global version the submitting node trained
+    from); ``latest_version`` is i-1 (the server's current version);
+    ``outstanding_versions`` are the base versions k' of the other nodes'
+    in-flight local weight sets (the paper's denominator sums over all
+    W_{j'}^{k'}, j' != j).  The submitter's own term is included so the
+    factor is a proper share in [0, 1] even when it is the only one in
+    flight (denominator then equals the numerator => gamma = 1).
+    """
+    denom_versions = list(outstanding_versions) + [base_version]
+    i_minus_1 = max(latest_version, 1)
+    num = float(jnp.exp(base_version / i_minus_1))
+    den = float(sum(jnp.exp(v / i_minus_1) for v in denom_versions))
+    return num / den
+
+
+@jax.jit
+def _agwu_apply(global_w, local_w, base_w, scale):
+    return jax.tree_util.tree_map(
+        lambda g, l, b: g + scale * (l - b), global_w, local_w, base_w)
+
+
+def agwu_update(global_weights, local_weights, base_weights,
+                gamma: float, accuracy: float):
+    """Eq. (10): W(i) = W(i-1) + gamma * Q * (W_j(k) - W(k)).
+
+    ``base_weights`` is the snapshot W(k) the worker trained from.
+    """
+    scale = jnp.asarray(gamma * accuracy, dtype=jnp.float32)
+    return _agwu_apply(global_weights, local_weights, base_weights, scale)

@@ -1,0 +1,98 @@
+"""Versioned parameter server for BPT-CNN's outer layer.
+
+Holds the global weight set, tracks versions, base snapshots per worker and
+which versions are in flight — everything Eq. (9)-(10) needs.  Communication
+accounting implements Eq. (11): every round trip is 2 transfers of the
+weight-set payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from .gwu import agwu_gamma, agwu_update, sgwu_merge
+
+__all__ = ["ParameterServer", "Submission"]
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(tree)))
+
+
+@dataclasses.dataclass
+class Submission:
+    worker: int
+    base_version: int
+    accuracy: float
+    virtual_time: float = 0.0
+
+
+class ParameterServer:
+    """Global weight store with SGWU and AGWU update paths."""
+
+    def __init__(self, init_weights, num_workers: int):
+        self.global_weights = init_weights
+        self.version = 0
+        self.num_workers = num_workers
+        # snapshots of the global weights each worker last pulled (W^(k))
+        self._base: dict[int, Any] = {}
+        self._base_version: dict[int, int] = {}
+        self.weight_bytes = _tree_bytes(init_weights)
+        self.comm_bytes = 0          # Eq. (11) accounting
+        self.num_updates = 0
+        self.update_log: list[Submission] = []
+
+    # ------------------------------------------------------------------
+    def pull(self, worker: int):
+        """Worker fetches the latest global weights (1 transfer)."""
+        self._base[worker] = self.global_weights
+        self._base_version[worker] = self.version
+        self.comm_bytes += self.weight_bytes
+        return self.global_weights, self.version
+
+    def outstanding_versions(self, exclude: Optional[int] = None):
+        return [v for w, v in self._base_version.items() if w != exclude]
+
+    # ------------------------------------------------------------------
+    def push_agwu(self, worker: int, local_weights, accuracy: float,
+                  virtual_time: float = 0.0):
+        """AGWU: apply Eq. (10) immediately (1 transfer in)."""
+        if worker not in self._base:
+            raise RuntimeError(f"worker {worker} never pulled weights")
+        base_w = self._base[worker]
+        k = self._base_version[worker]
+        gamma = agwu_gamma(k, max(self.version, 1),
+                           self.outstanding_versions(exclude=worker))
+        self.global_weights = agwu_update(
+            self.global_weights, local_weights, base_w, gamma, accuracy)
+        self.version += 1
+        self.num_updates += 1
+        self.comm_bytes += self.weight_bytes
+        self.update_log.append(Submission(worker, k, accuracy, virtual_time))
+        return gamma
+
+    def push_sgwu(self, submissions: list[tuple[int, Any, float]],
+                  virtual_time: float = 0.0):
+        """SGWU: barrier-merge all workers' weights with Eq. (7)."""
+        if len(submissions) != self.num_workers:
+            raise RuntimeError("SGWU requires a submission from every worker")
+        locals_, accs = [], []
+        for worker, w, q in submissions:
+            locals_.append(w)
+            accs.append(q)
+            self.comm_bytes += self.weight_bytes
+            self.update_log.append(
+                Submission(worker, self.version, q, virtual_time))
+        self.global_weights = sgwu_merge(locals_, accs)
+        self.version += 1
+        self.num_updates += 1
+        return self.global_weights
+
+    # ------------------------------------------------------------------
+    def expected_comm_bytes(self, iterations: int) -> int:
+        """Eq. (11): C = 2 c_w * m * K."""
+        return 2 * self.weight_bytes * self.num_workers * iterations

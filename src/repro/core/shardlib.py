@@ -1,0 +1,78 @@
+"""Logical-axis sharding rules (MaxText-style) decoupling models from meshes.
+
+Models annotate activations with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``); the launcher installs a mapping
+from logical names to mesh axes (``set_rules``).  With no rules installed
+(CPU tests) the calls are no-ops, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["set_rules", "get_rules", "constrain", "constrain_div",
+           "rules_scope", "spec_for"]
+
+_RULES: Optional[dict] = None
+
+
+def set_rules(rules: Optional[dict]) -> None:
+    """rules: {logical_name: mesh axis (str | tuple | None)}."""
+    global _RULES
+    _RULES = rules
+
+
+def get_rules() -> Optional[dict]:
+    return _RULES
+
+
+@contextlib.contextmanager
+def rules_scope(rules: Optional[dict]):
+    global _RULES
+    prev = _RULES
+    _RULES = rules
+    try:
+        yield
+    finally:
+        _RULES = prev
+
+
+def spec_for(*logical_axes: Optional[str]) -> P:
+    assert _RULES is not None
+    return P(*(_RULES.get(a) if a is not None else None
+               for a in logical_axes))
+
+
+def _axis_size(axis) -> int:
+    sizes = (_RULES or {}).get("_axis_sizes", {})
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def constrain_div(x, *logical_axes: Optional[str]):
+    """Like constrain, but silently replicates any dim the mapped mesh
+    axis does not divide (needs "_axis_sizes" in the rules)."""
+    if _RULES is None:
+        return x
+    spec = []
+    for dim, a in zip(x.shape, logical_axes):
+        ax = _RULES.get(a) if a is not None else None
+        spec.append(ax if ax is not None and dim % _axis_size(ax) == 0
+                    else None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Apply with_sharding_constraint if rules are installed, else no-op."""
+    if _RULES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec_for(*logical_axes))

@@ -1,0 +1,87 @@
+"""Data pipeline: sequence packing, sharded host loading, IDPA partitioning.
+
+``IDPADataset`` glues the paper's partitioner (core/idpa.py) to an actual
+dataset: each virtual computing node (data-parallel group) owns the sample
+stripe the partitioner assigned it, re-partitioned incrementally as measured
+throughputs arrive — the production analogue of Alg. 3.1 where the "main
+server" is the input pipeline.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.idpa import IDPAPartitioner, UDPAPartitioner
+
+__all__ = ["pack_sequences", "IDPADataset", "host_batch"]
+
+
+def pack_sequences(corpus: np.ndarray, seq_len: int) -> np.ndarray:
+    """Pack a token stream into (N, seq_len+1) rows (inputs+shifted labels)."""
+    n = (len(corpus) - 1) // seq_len
+    rows = np.stack([corpus[i * seq_len:(i + 1) * seq_len + 1]
+                     for i in range(n)])
+    return rows.astype(np.int32)
+
+
+def host_batch(rows: np.ndarray):
+    """(B, S+1) rows -> {'tokens': (B,S), 'labels': (B,S)}."""
+    return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+class IDPADataset:
+    """Per-node dataset views driven by the IDPA/UDPA partitioner.
+
+    Usage:
+        ds = IDPADataset(data_arrays, num_nodes=4, batches=4,
+                         frequencies=[...])
+        for epoch_round in range(...):
+            views = ds.node_views()          # list of per-node index arrays
+            ...train...
+            ds.report_durations(durations)   # feeds Alg. 3.1
+    """
+
+    def __init__(self, arrays: dict, num_nodes: int, batches: int,
+                 frequencies: Optional[Sequence[float]] = None,
+                 partitioning: str = "idpa", idpa_mode: str = "paper"):
+        self.arrays = arrays
+        self.n = len(next(iter(arrays.values())))
+        if partitioning == "idpa":
+            if frequencies is None:
+                frequencies = np.ones(num_nodes)
+            self.part = IDPAPartitioner(self.n, num_nodes, batches,
+                                        frequencies=frequencies,
+                                        mode=idpa_mode)
+        else:
+            self.part = UDPAPartitioner(self.n, num_nodes, batches)
+        self.part.first_batch()
+
+    @property
+    def totals(self) -> np.ndarray:
+        return self.part.totals
+
+    def report_durations(self, durations) -> bool:
+        """Feed measured per-node durations; returns True if re-allocated."""
+        if self.part.done:
+            return False
+        if isinstance(self.part, IDPAPartitioner):
+            self.part.next_batch(durations)
+        else:
+            self.part.next_batch(None)
+        return True
+
+    def node_views(self) -> list[np.ndarray]:
+        """Contiguous index stripes per node (no migration — paper §3.3.1)."""
+        totals = self.part.totals
+        starts = np.concatenate([[0], np.cumsum(totals)[:-1]])
+        return [np.arange(starts[j], starts[j] + totals[j]) % self.n
+                for j in range(len(totals))]
+
+    def node_batch(self, node: int, batch_size: int, rng: np.random.Generator):
+        view = self.node_views()[node]
+        take = min(batch_size, len(view))
+        if take == 0:
+            raise ValueError(f"node {node} has no samples allocated yet")
+        sel = rng.choice(view, size=batch_size, replace=take < batch_size)
+        return {k: v[sel] for k, v in self.arrays.items()}

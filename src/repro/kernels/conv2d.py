@@ -1,0 +1,73 @@
+"""Pallas TPU conv2d kernel — the paper's inner-layer hot spot (§4.1.1).
+
+TPU adaptation of the paper's per-output-element task decomposition
+(Eq. 13-14): the ``pallas_call`` grid cell *is* the paper's "task" — one
+(batch, output-channel-tile) block — and the BlockSpec is the task
+granularity.  Instead of scalar element tasks (GPU/CPU-friendly) the kernel
+computes each task as kh*kw shifted (H*W, Cin) x (Cin, Cout_tile) matmuls,
+which is the MXU-native im2col form of Eq. (1).
+
+Layout: x NHWC (pre-padded by the wrapper), w HWIO, out NHWC.
+Stride 1 (the paper's CNNs pool instead of striding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv2d_pallas"]
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, H: int, W: int):
+    """One task: x (1, H+kh-1, W+kw-1, Cin); w (kh,kw,Cin,Ct); o (1,H,W,Ct)."""
+    cin = x_ref.shape[-1]
+    ct = o_ref.shape[-1]
+    acc = jnp.zeros((H * W, ct), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = x_ref[0, i:i + H, j:j + W, :].reshape(H * W, cin)
+            wmat = w_ref[i, j, :, :]
+            acc += jnp.dot(patch, wmat, preferred_element_type=jnp.float32)
+    o_ref[0, :, :, :] = acc.reshape(H, W, ct).astype(o_ref.dtype)
+
+
+def conv2d_pallas(x, w, *, padding: str = "SAME", oc_tile: int = 0,
+                  interpret: bool = True):
+    """x: (B,H,W,Cin); w: (kh,kw,Cin,Cout) -> (B,H,W,Cout) (SAME, stride 1).
+
+    ``oc_tile``: output-channel tile (0 = all channels in one task).  The
+    grid is (B, Cout/oc_tile) — the paper's parallel task list PT_Conv.
+    """
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw),
+                         (0, 0)))
+    elif padding == "VALID":
+        xp = x
+        H, W = H - kh + 1, W - kw + 1
+    else:
+        raise ValueError(padding)
+    oc_tile = oc_tile or Cout
+    assert Cout % oc_tile == 0
+    grid = (B, Cout // oc_tile)
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, kh=kh, kw=kw, H=H, W=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H + kh - 1, W + kw - 1, Cin),
+                         lambda b, c: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, Cin, oc_tile),
+                         lambda b, c: (0, 0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, H, W, oc_tile),
+                               lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, Cout), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+    return out

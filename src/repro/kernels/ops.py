@@ -1,0 +1,66 @@
+"""Jit'd public wrappers over the Pallas kernels with jnp-ref fallbacks.
+
+Implementation selection:
+  * ``REPRO_KERNEL_IMPL=ref``    — pure-jnp oracles (default on CPU; fully
+    differentiable, what the models and the 512-device dry-run lower).
+  * ``REPRO_KERNEL_IMPL=pallas`` — Pallas kernels (interpret=True on CPU,
+    compiled on TPU).  Forward-only paths.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .conv2d import conv2d_pallas
+from .flash_attention import flash_attention_pallas
+from .rmsnorm import rmsnorm_pallas
+
+__all__ = ["conv2d", "max_pool2d", "flash_attention", "rmsnorm",
+           "default_impl"]
+
+
+def default_impl() -> str:
+    impl = os.environ.get("REPRO_KERNEL_IMPL", "")
+    if impl:
+        return impl
+    return "ref" if jax.default_backend() == "cpu" else "pallas"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def conv2d(x, w, padding: str = "SAME", stride: int = 1, impl: str = ""):
+    impl = impl or default_impl()
+    if impl == "pallas" and stride == 1:
+        return conv2d_pallas(x, w, padding=padding, interpret=_interpret())
+    return ref.conv2d_ref(x, w, padding=padding, stride=stride)
+
+
+def max_pool2d(x, window: int = 2, stride: int = 2):
+    return ref.max_pool2d_ref(x, window=window, stride=stride)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    impl: str = ""):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KH,D) — BSHD layout like the models."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        out = flash_attention_pallas(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window,
+            softcap=softcap, interpret=_interpret())
+        return out.transpose(0, 2, 1, 3)
+    return ref.attention_ref(q, k, v, causal=causal,
+                             window=window or None, softcap=softcap)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, impl: str = ""):
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return rmsnorm_pallas(x, scale, eps=eps, interpret=_interpret())
+    return ref.rmsnorm_ref(x, scale, eps=eps)

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the production meshes need 512
+placeholder host devices.  Never import this module from tests/benches that
+expect a single device; run it as ``python -m repro.launch.dryrun``.
+
+For each combination this script:
+  1. builds the mesh (16x16 pod / 2x16x16 multipod),
+  2. lowers the step with explicit in/out shardings over abstract inputs,
+  3. compiles the production artifact (scan-over-layers) — proves sharding
+     coherence + gives memory_analysis,
+  4. compiles two small CALIBRATION artifacts (1 and 2 layers, scans
+     unrolled, inner chunk loops widened to one iteration) whose
+     cost_analysis counts every op exactly; per-layer deltas are
+     extrapolated to the full depth.  This sidesteps XLA's HLO cost
+     analysis counting while-loop bodies once (measured, see
+     EXPERIMENTS.md §Roofline methodology),
+  5. records everything into experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.core import shardlib
+from repro.launch import roofline, sharding, steps
+from repro.launch.mesh import make_mesh
+
+OUT_DIR = "experiments/dryrun"
+
+
+def _named(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowered(cfg, shape, mesh, remat=True, scan_unroll=False,
+                  donate=True):
+    """Lower one step with explicit shardings; returns jax Lowered."""
+    params = steps.abstract_params(cfg)
+    pspecs = sharding.param_specs(params, mesh)
+    batch = steps.input_specs(cfg, shape)
+    bspecs = sharding.batch_specs(batch, mesh, shape.mode)
+
+    with shardlib.rules_scope(sharding.logical_rules(mesh, cfg)):
+        if shape.mode == "train":
+            opt_state = steps.abstract_opt_state(cfg)
+            ospecs = sharding.opt_state_specs(opt_state, params, mesh)
+            fn = steps.make_train_step(cfg, remat=remat,
+                                       scan_unroll=scan_unroll)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(_named(pspecs, mesh), _named(ospecs, mesh),
+                              _named(bspecs, mesh)),
+                out_shardings=(_named(pspecs, mesh), _named(ospecs, mesh),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1) if donate else ())
+            with mesh:
+                return jitted.lower(params, opt_state, batch)
+        if shape.mode == "prefill":
+            fn = steps.make_prefill_step(cfg, scan_unroll=scan_unroll)
+            jitted = jax.jit(
+                fn, in_shardings=(_named(pspecs, mesh), _named(bspecs, mesh)))
+            with mesh:
+                return jitted.lower(params, batch)
+        # decode
+        cache = steps.abstract_cache(cfg, shape)
+        cspecs = sharding.cache_specs(cache, mesh, shape.global_batch)
+        fn = steps.make_decode_step(cfg, scan_unroll=scan_unroll)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(_named(pspecs, mesh), _named(cspecs, mesh),
+                          NamedSharding(mesh, P()), _named(bspecs, mesh)),
+            out_shardings=(NamedSharding(mesh, P()), _named(cspecs, mesh)),
+            donate_argnums=(1,) if donate else ())
+        cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh:
+            return jitted.lower(params, cache, cache_len, batch)
+
+
+def _costs(compiled, chips):
+    """(global_flops, global_bytes, global_coll_bytes, coll_detail)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * chips      # cost is per-device
+    byts = float(cost.get("bytes accessed", 0.0)) * chips
+    coll = roofline.parse_hlo_collectives(compiled.as_text())
+    cbytes = sum(v for k, v in coll.items() if not k.startswith("_")) * chips
+    counts = coll.get("_counts", {})
+    return flops, byts, cbytes, counts
+
+
+def _calib_cfg(cfg, shape, k: int):
+    """k-layer calibration config with inner chunk loops widened away."""
+    big = max(shape.seq_len, 1)
+    kw = dict(num_layers=k, attn_q_chunk=big, attn_k_chunk=big, ce_chunk=big)
+    if cfg.num_encoder_layers:
+        kw["num_encoder_layers"] = k
+    return dataclasses.replace(cfg, **kw)
+
+
+def calibrated_costs(cfg, shape, mesh, remat=True):
+    """Exact-op cost via 1-/2-layer unrolled compiles, extrapolated to L."""
+    per = {}
+    for k in (1, 2):
+        low = build_lowered(_calib_cfg(cfg, shape, k), shape, mesh,
+                            remat=remat, scan_unroll=True, donate=False)
+        per[k] = _costs(low.compile(), mesh.size)
+    L = cfg.num_layers
+    df = per[2][0] - per[1][0]
+    db = per[2][1] - per[1][1]
+    dc = per[2][2] - per[1][2]
+    return {
+        "flops": per[1][0] + (L - 1) * df,
+        "bytes": per[1][1] + (L - 1) * db,
+        "coll_bytes": per[1][2] + (L - 1) * dc,
+        "per_layer": {"flops": df, "bytes": db, "coll_bytes": dc},
+        "outside": {"flops": per[1][0] - df, "bytes": per[1][1] - db,
+                    "coll_bytes": per[1][2] - dc},
+        "coll_counts_L1": per[1][3],
+        "coll_counts_L2": per[2][3],
+    }
+
+
+# Empirically calibrated on this XLA build (see EXPERIMENTS.md §Roofline
+# methodology): (bytes_naive - bytes_chunked) / (appearances * B * H * S^2)
+# for a 1-layer step.  train (fwd+remat+bwd) = 54.95, prefill (fwd) = 35.02
+# B/elem (s f32 w+r, mask/where chain, softmax, p cast + matmul reads).
+SCORE_BYTES_PER_ELEM = {"train": 55.0, "prefill": 35.0}
+
+
+def _attn_score_bytes(cfg, shape) -> float:
+    """Analytic traffic of the materialised score/prob matrices the
+    calibration's non-chunked attention adds vs the deployed flash path,
+    per appearance (train: fwd + remat-recompute + bwd = 3; prefill: 1;
+    decode: 0)."""
+    if not cfg.num_heads or shape.mode == "decode":
+        return 0.0
+    if cfg.arch_type == "encdec":
+        se = shape.seq_len // 2
+        sd = shape.seq_len - se
+        elems = cfg.num_encoder_layers * se * se + \
+            cfg.num_layers * (sd * sd + sd * se)
+    else:
+        s = shape.seq_len
+        elems = cfg.num_layers * s * s
+    appearances = 3 if shape.mode == "train" else 1
+    factor = SCORE_BYTES_PER_ELEM[shape.mode]
+    return float(appearances * factor * shape.global_batch
+                 * cfg.num_heads * elems)
+
+
+def _banded_flops_corr(cfg, shape) -> float:
+    """Analytic FLOP reduction from attn_block_skip: masked-out kv blocks
+    (outside the causal/sliding-window band) are lax.cond-skipped at
+    runtime, but both the calibration and plain cost analysis price the
+    full S^2.  Per windowed layer the live fraction is
+    ~(window + q_chunk + k_chunk)/S; causal-global layers ~0.5."""
+    if not (cfg.attn_block_skip and cfg.num_heads) or shape.mode == "decode":
+        return 0.0
+    import numpy as np
+    from repro.models.blocks import GLOBAL_WINDOW, layer_windows
+    S = shape.seq_len if cfg.arch_type != "encdec" else shape.seq_len // 2
+    qc, kc = cfg.attn_q_chunk or 512, cfg.attn_k_chunk or 1024
+    wins = np.asarray(layer_windows(cfg))
+    fracs = np.where(wins >= GLOBAL_WINDOW, 0.5 + qc / (2 * S),
+                     np.minimum(1.0, (wins + qc + kc) / S))
+    apps = 3 if shape.mode == "train" else 1
+    per_layer_attn = apps * 4.0 * shape.global_batch * cfg.num_heads \
+        * S * S * cfg.head_dim
+    return float(per_layer_attn * np.sum(1.0 - fracs))
+
+
+def lower_and_compile(arch: str, shape_name: str, mesh_name: str,
+                      variant: str = "", remat: bool = True,
+                      verbose: bool = True, calibrate: bool = True,
+                      cfg_override=None):
+    cfg = cfg_override or configs.get_config(arch, variant)
+    shape = configs.get_shape(shape_name)
+    mesh = make_mesh(mesh_name)
+    chips = mesh.size
+
+    t0 = time.time()
+    lowered = build_lowered(cfg, shape, mesh, remat=remat)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {a: float(getattr(mem, a, 0) or 0)
+             for a in ("temp_size_in_bytes", "argument_size_in_bytes",
+                       "output_size_in_bytes", "generated_code_size_in_bytes")}
+    full_flops, full_bytes, full_coll, full_counts = _costs(compiled, chips)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "chips": chips, "compile_s": round(compile_s, 1),
+        "memory_analysis": mem_d,
+        "full_artifact": {
+            "flops_body_once": full_flops, "bytes_body_once": full_bytes,
+            "coll_bytes_body_once": full_coll, "coll_counts": full_counts,
+        },
+    }
+
+    if calibrate:
+        cal = calibrated_costs(cfg, shape, mesh, remat=remat)
+        score_corr = _attn_score_bytes(cfg, shape)
+        banded_corr = _banded_flops_corr(cfg, shape)
+        cal_flops = max(cal["flops"] - banded_corr, 0.0)
+        # flash-adjusted bytes drive the memory term and the bottleneck:
+        # the deployed (chunked/Pallas) attention keeps scores in VMEM, so
+        # the naive-calibration score traffic is subtracted analytically.
+        bytes_flash = max(cal["bytes"] - score_corr, 0.0)
+        rep = roofline.RooflineReport(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops=cal_flops, hlo_bytes=bytes_flash,
+            coll_bytes=cal["coll_bytes"], coll_detail=cal["coll_counts_L2"],
+            model_flops_=roofline.model_flops(cfg, shape),
+            per_device_hbm=mem_d["temp_size_in_bytes"]
+            + mem_d["argument_size_in_bytes"])
+        result["calibrated"] = cal
+        result["attn_score_bytes_corr"] = score_corr
+        result["banded_flops_corr"] = banded_corr
+        row = rep.row()
+        hw = roofline.HW()
+        row["memory_naive_ms"] = round(
+            cal["bytes"] / (chips * hw.hbm_bw) * 1e3, 3)
+        row["memory_flash_ms"] = row["memory_ms"]
+        result["roofline"] = row
+
+    if verbose:
+        msg = (f"[dryrun] {arch} x {shape_name} x {mesh_name}"
+               f"{' (' + variant + ')' if variant else ''}: "
+               f"compile {compile_s:.1f}s")
+        if calibrate:
+            r = result["roofline"]
+            msg += (f"  flops {r['flops_T']}T coll {r['coll_G']}GB "
+                    f"bottleneck={r['bottleneck']} "
+                    f"useful={r['useful_frac']}")
+        print(msg)
+        print(f"  memory_analysis: {mem_d}")
+    return result
+
+
+def save_result(result: dict, tag: str = "") -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fn = (f"{OUT_DIR}/{result['arch']}__{result['shape']}__"
+          f"{result['mesh']}{suffix}.json")
+    with open(fn, "w") as f:
+        json.dump(result, f, indent=1)
+    return fn
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {configs.ARCH_NAMES} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--mesh", default="pod",
+                    help="pod|multipod|tiny|tiny3d|both")
+    ap.add_argument("--variant", default="",
+                    help="'' or 'swa' (sliding-window long-context variant)")
+    ap.add_argument("--tag", default="", help="output filename tag")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the 1/2-layer cost calibration compiles")
+    ap.add_argument("--include-skips", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = configs.ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(configs.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if (arch, shape) in configs.SKIPS and not args.include_skips \
+                    and not args.variant:
+                print(f"[skip] {arch} x {shape}: "
+                      f"{configs.SKIPS[(arch, shape)]}")
+                continue
+            for mesh in meshes:
+                try:
+                    res = lower_and_compile(
+                        arch, shape, mesh, variant=args.variant,
+                        remat=not args.no_remat,
+                        calibrate=not args.no_calibrate)
+                    fn = save_result(res, tag=args.tag or args.variant)
+                    print(f"  -> {fn}")
+                except Exception as e:  # noqa: BLE001 — report every combo
+                    traceback.print_exc()
+                    failures.append((arch, shape, mesh, str(e)[:200]))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print("\nall dry-runs passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

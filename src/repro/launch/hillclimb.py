@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-hillclimb driver: evaluate one (arch x shape x mesh) with config
+overrides and print/record the roofline row.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch gemma2-27b \
+        --shape train_4k --mesh pod --tag hc1a \
+        --set bf16_params_compute=True --set mlp_megatron=True
+"""
+import argparse
+import dataclasses
+import json
+
+from repro import configs
+from repro.launch import dryrun
+
+
+def parse_value(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE", help="ModelConfig overrides")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, args.variant)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    print(f"[hillclimb:{args.tag}] {args.arch} x {args.shape} x {args.mesh} "
+          f"overrides={overrides}")
+    res = dryrun.lower_and_compile(args.arch, args.shape, args.mesh,
+                                   remat=not args.no_remat,
+                                   cfg_override=cfg)
+    res["overrides"] = overrides
+    fn = dryrun.save_result(res, tag=args.tag)
+    print(f"  -> {fn}")
+    print(json.dumps(res["roofline"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

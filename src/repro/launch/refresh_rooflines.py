@@ -1,0 +1,51 @@
+"""Recompute roofline rows in experiments/dryrun/*.json from the stored raw
+calibration data (no recompilation) — used when the roofline formulas /
+correction factors change after a sweep has already run.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+from repro import configs
+from repro.launch import roofline
+from repro.launch.dryrun import _attn_score_bytes
+
+
+def refresh(path_glob: str = "experiments/dryrun/*.json") -> int:
+    n = 0
+    for fn in sorted(glob.glob(path_glob)):
+        data = json.load(open(fn))
+        if "calibrated" not in data:
+            continue
+        cfg = configs.get_config(data["arch"], data.get("variant", ""))
+        shape = configs.get_shape(data["shape"])
+        cal = data["calibrated"]
+        score_corr = _attn_score_bytes(cfg, shape)
+        bytes_flash = max(cal["bytes"] - score_corr, 0.0)
+        rep = roofline.RooflineReport(
+            arch=data["arch"], shape=data["shape"], mesh=data["mesh"],
+            chips=data["chips"], hlo_flops=cal["flops"],
+            hlo_bytes=bytes_flash, coll_bytes=cal["coll_bytes"],
+            coll_detail=cal.get("coll_counts_L2", {}),
+            model_flops_=roofline.model_flops(cfg, shape),
+            per_device_hbm=data["memory_analysis"]["temp_size_in_bytes"]
+            + data["memory_analysis"]["argument_size_in_bytes"])
+        row = rep.row()
+        hw = roofline.HW()
+        row["memory_naive_ms"] = round(
+            cal["bytes"] / (data["chips"] * hw.hbm_bw) * 1e3, 3)
+        row["memory_flash_ms"] = row["memory_ms"]
+        data["attn_score_bytes_corr"] = score_corr
+        data["roofline"] = row
+        with open(fn, "w") as f:
+            json.dump(data, f, indent=1)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    glob_arg = sys.argv[1] if len(sys.argv) > 1 else \
+        "experiments/dryrun/*.json"
+    print(f"refreshed {refresh(glob_arg)} artifacts")

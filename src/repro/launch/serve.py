@@ -1,0 +1,71 @@
+"""Serving driver: batched prefill + decode with a KV/SSM cache.
+
+CPU-scale demo of the decode path the dry-run lowers at production shapes:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+
+
+def greedy_generate(params, cfg, prompts, max_seq: int, gen: int):
+    """prompts: (B, P) int32.  Prefill token-by-token, then greedy decode."""
+    B, P = prompts.shape
+    cache = lm.init_cache(cfg, B, max_seq)
+    step = jax.jit(lambda p, c, n, t: lm.decode_step(p, c, n, t, cfg))
+    # prefill via the decode path (exercises cache writes at every pos)
+    logits = None
+    for i in range(P):
+        logits, cache = step(params, cache, jnp.int32(i), prompts[:, i:i + 1])
+    out = []
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    for i in range(gen):
+        out.append(tok)
+        logits, cache = step(params, cache, jnp.int32(P + i), tok)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m",
+                    choices=configs.ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_reduced(args.arch)
+    if cfg.arch_type == "encdec":
+        raise SystemExit("decoder-only serving demo; pick another arch")
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(key, cfg)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    max_seq = args.prompt_len + args.gen + 1
+    t0 = time.time()
+    out = greedy_generate(params, cfg, prompts, max_seq, args.gen)
+    jax.block_until_ready(out)
+    wall = time.time() - t0
+    total_steps = args.batch * (args.prompt_len + args.gen)
+    print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen} -> {out.shape} in {wall:.2f}s "
+          f"({total_steps / wall:.1f} tok/s incl. compile)")
+    print("[serve] generated ids[0]:", np.asarray(out[0]))
+    assert not bool(jnp.isnan(out).any())
+    return out
+
+
+if __name__ == "__main__":
+    main()

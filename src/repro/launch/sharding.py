@@ -1,0 +1,202 @@
+"""Per-architecture parameter/activation/cache sharding rules.
+
+Parameters are matched by pytree path suffix; every rule degrades to
+replication when the tensor dim is not divisible by the mesh axis (so the
+same rules serve the 16-wide model axis and the tiny test meshes).
+
+Conventions (leading layer axis from the scan stack is never sharded):
+  * attention qkv in-proj  : columns on `model`   (head sharding)
+  * attention out-proj     : rows on `model`
+  * MLP wi/wg              : columns on `model`
+  * MLP wo                 : rows on `model`
+  * MoE experts            : expert axis on `model` (expert parallelism)
+  * embeddings / lm head   : vocab on `model`
+  * mamba mixer            : replicated (see DESIGN.md: fused in-proj layout
+    boundaries don't align with a 16-way split; hillclimb candidate)
+  * norms / scalars        : replicated
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "cache_specs",
+           "logical_rules", "opt_state_specs"]
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _maybe(mesh, dim_size: int, axis):
+    """Use `axis` if it divides dim_size, else replicate that dim."""
+    return axis if dim_size % _axis_size(mesh, axis) == 0 else None
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+def _spec_for_path(path: tuple, leaf, mesh) -> P:
+    keys = [k.key for k in path if hasattr(k, "key")]
+    name = "/".join(keys)
+    shape = leaf.shape
+    tp = "model"
+
+    def col(idx_from_end=1):
+        """Shard the given dim (from the end) on `model` if divisible."""
+        ax = [None] * len(shape)
+        dim = len(shape) - idx_from_end
+        ax[dim] = _maybe(mesh, shape[dim], tp)
+        return P(*ax)
+
+    # embeddings & heads: vocab on model (first dim after optional stack)
+    if name.endswith(("embed/table", "lm_head/table")):
+        return P(_maybe(mesh, shape[0], tp), None)
+
+    # attention projections
+    if any(name.endswith(s) for s in ("wq/w", "wk/w", "wv/w")):
+        return col(1)
+    if "attn" in name and name.endswith("wo/w"):
+        return col(2)
+    if any(s in name for s in ("self_attn", "cross_attn")) and \
+            name.endswith("wo/w"):
+        return col(2)
+
+    # MLP
+    if any(name.endswith(s) for s in ("wi/w", "wg/w")) and "moe" not in name:
+        return col(1)
+    if name.endswith("mlp/wo/w"):
+        return col(2)
+
+    # MoE: experts on model (expert parallelism); router replicated.
+    # Fallback when E doesn't divide the axis (granite: 40 vs 16): shard
+    # the per-expert FFN dim instead (expert tensor parallelism) so the
+    # expert compute still splits 16 ways (§Perf bonus hc4).
+    if "moe" in name and keys[-1] in ("wi", "wg", "wo"):
+        ax = [None] * len(shape)
+        edim = len(shape) - 3          # (L, E, d, f) or (E, d, f)
+        if shape[edim] % _axis_size(mesh, tp) == 0:
+            ax[edim] = tp
+        else:
+            fdim = len(shape) - 1 if keys[-1] in ("wi", "wg") \
+                else len(shape) - 2
+            ax[fdim] = _maybe(mesh, shape[fdim], tp)
+        return P(*ax)
+
+    # frontend projector
+    if name.endswith("frontend_proj/w"):
+        return col(1)
+
+    # everything else (norms, mamba mixer, biases, scalars): replicated
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_path(path, leaf, mesh), params)
+
+
+def param_shardings(params, mesh):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params, mesh))
+
+
+def opt_state_specs(opt_state, params, mesh):
+    """AdamW moments share the param layout; counters are replicated."""
+    pspecs = param_specs(params, mesh)
+
+    def match(st):
+        if isinstance(st, dict) and "mu" in st:
+            return {"mu": pspecs, "nu": pspecs, "count": P()}
+        if st == () or st is None:
+            return st
+        return jax.tree_util.tree_map(lambda _: P(), st)
+    return match(opt_state)
+
+
+# ----------------------------------------------------------------------
+# Activations / logical rules
+# ----------------------------------------------------------------------
+def logical_rules(mesh, cfg=None) -> dict:
+    dp = data_axes(mesh)
+    tp = mesh.shape["model"]
+    heads_ok = cfg is not None and cfg.num_heads and cfg.num_heads % tp == 0
+    kv_ok = cfg is not None and cfg.num_kv_heads and cfg.num_kv_heads % tp == 0
+    exp_ok = cfg is not None and cfg.num_experts and cfg.num_experts % tp == 0
+    ff_ok = cfg is not None and cfg.d_ff and cfg.d_ff % tp == 0
+    return {
+        "batch": dp if dp else None,
+        "seq": "model",       # sequence sharding at layer boundaries (SP)
+        "embed": None,
+        "vocab": "model",
+        # attention computed head-sharded (SP<->TP all-to-all at the block
+        # boundary); kv heads replicate when GQA kv < |model|
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "expert": "model" if exp_ok else None,
+        # capacity-dim fallback sharding when experts can't split
+        "capacity": None if exp_ok else "model",
+        "mlp_ff": "model" if ff_ok else None,
+        "kv_seq": "model",
+        "tp": "model",
+        "_axis_sizes": dict(mesh.shape),
+    }
+
+
+# ----------------------------------------------------------------------
+# Inputs & caches
+# ----------------------------------------------------------------------
+def batch_specs(batch_shape_tree, mesh, mode: str):
+    """Specs for the host batch: shard batch dim over (pod, data)."""
+    dp = data_axes(mesh)
+
+    def spec(leaf):
+        b = leaf.shape[0]
+        bt = _maybe(mesh, b, dp)
+        return P(bt, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree_util.tree_map(spec, batch_shape_tree)
+
+
+def cache_specs(cache_tree, mesh, batch: int):
+    """Decode caches (stacked over layers, leading L axis).
+
+    kv k/v: (L, B, S, KH, D) — batch over (pod,data) when divisible, else
+    the *sequence* is context-sharded over every available axis (long_500k,
+    batch=1).  SSM state: (L, B, H, P, N) — batch over dp, heads on model.
+    """
+    dp = data_axes(mesh)
+    batch_ok = batch % _axis_size(mesh, dp) == 0
+
+    def spec(path, leaf):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = "/".join(keys)
+        shp = leaf.shape
+        if keys and keys[-1] in ("k", "v") or "cross" in name:
+            # (L, B, S, KH, D)
+            if batch_ok:
+                kh = _maybe(mesh, shp[3], "model")
+                seq = "model" if kh is None else None
+                seq = _maybe(mesh, shp[2], seq) if seq else None
+                return P(None, dp, seq, kh, None)
+            all_axes = tuple(mesh.axis_names)
+            return P(None, None, _maybe(mesh, shp[2], all_axes), None, None)
+        if keys and keys[-1] == "ssm":
+            # (L, B, H, P, N)
+            bt = dp if batch_ok else None
+            return P(None, bt, _maybe(mesh, shp[2], "model"), None, None)
+        if keys and keys[-1] == "conv":
+            bt = dp if batch_ok else None
+            return P(None, bt, None, _maybe(mesh, shp[3], "model"))
+        bt = dp if batch_ok else None
+        return P(bt, *([None] * (len(shp) - 1)))
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

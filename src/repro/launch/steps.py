@@ -1,0 +1,149 @@
+"""Step functions (train / prefill / decode) + abstract input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — so ``jit(...).lower()``
+can compile production shapes on placeholder devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
+                                    make_optimizer)
+
+__all__ = ["input_specs", "abstract_params", "abstract_opt_state",
+           "abstract_cache", "make_train_step", "make_prefill_step",
+           "make_decode_step", "enc_len", "text_len"]
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+I32 = jnp.int32
+
+
+def enc_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Encoder length for enc-dec archs: half the shape budget."""
+    return shape.seq_len // 2
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Decoder/text token count so total processed length == seq_len."""
+    if cfg.arch_type == "encdec":
+        return shape.seq_len - enc_len(cfg, shape)
+    if cfg.frontend:
+        return shape.seq_len - cfg.num_frontend_tokens
+    return shape.seq_len
+
+
+# ----------------------------------------------------------------------
+# Abstract inputs
+# ----------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract host batch for the given shape preset."""
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    if shape.mode in ("train", "prefill"):
+        T = text_len(cfg, shape)
+        batch = {"tokens": sds((B, T), I32)}
+        if shape.mode == "train":
+            batch["labels"] = sds((B, T), I32)
+        if cfg.arch_type == "encdec":
+            batch["frontend_embeds"] = sds((B, enc_len(cfg, shape),
+                                            cfg.d_model), BF16)
+        elif cfg.frontend:
+            batch["frontend_embeds"] = sds((B, cfg.num_frontend_tokens,
+                                            cfg.d_model), BF16)
+        return batch
+    # decode: one token against a seq_len cache
+    return {"tokens": sds((B, 1), I32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    if cfg.arch_type == "encdec":
+        return jax.eval_shape(lambda k: encdec.init_encdec_params(k, cfg), key)
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+
+
+def abstract_opt_state(cfg: ModelConfig, optimizer: str = "adamw"):
+    opt = make_optimizer(optimizer)
+    params = abstract_params(cfg)
+    return jax.eval_shape(opt.init, params)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    if cfg.arch_type == "encdec":
+        return jax.eval_shape(
+            lambda: encdec.init_encdec_cache(
+                cfg, B, shape.seq_len, enc_len(cfg, shape)))
+    return jax.eval_shape(lambda: lm.init_cache(cfg, B, shape.seq_len))
+
+
+# ----------------------------------------------------------------------
+# Steps
+# ----------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, optimizer: str = "adamw",
+                    learning_rate: float = 3e-4, grad_clip: float = 1.0,
+                    remat: bool = True, scan_unroll: bool = False):
+    opt = make_optimizer(optimizer)
+    if cfg.arch_type == "encdec":
+        def loss(params, batch):
+            return encdec.encdec_loss_fn(params, batch, cfg,
+                                         scan_unroll=scan_unroll)
+    else:
+        def loss(params, batch):
+            return lm.loss_fn(params, batch, cfg, remat=remat,
+                              scan_unroll=scan_unroll)
+
+    def train_step(params, opt_state, batch):
+        (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        if grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = jnp.zeros(())
+        updates, opt_state = opt.update(grads, opt_state, params,
+                                        learning_rate)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": l, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, scan_unroll: bool = False):
+    if cfg.arch_type == "encdec":
+        def prefill(params, batch):
+            memory = encdec.encode(params, batch["frontend_embeds"], cfg,
+                                   scan_unroll=scan_unroll)
+            hidden = encdec._decode_stack(
+                params, encdec.embed_tokens(params, batch["tokens"], cfg),
+                memory, cfg, scan_unroll=scan_unroll)
+            return hidden[:, -1]
+        return prefill
+
+    def prefill(params, batch):
+        hidden, caches, _ = lm.forward(
+            params, batch["tokens"], cfg,
+            frontend_embeds=batch.get("frontend_embeds"),
+            collect_cache=cfg.arch_type not in ("ssm",),
+            scan_unroll=scan_unroll)
+        return hidden[:, -1], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, scan_unroll: bool = False):
+    if cfg.arch_type == "encdec":
+        def decode(params, cache, cache_len, batch):
+            return encdec.encdec_decode_step(params, cache, cache_len,
+                                             batch["tokens"], cfg,
+                                             scan_unroll=scan_unroll)
+        return decode
+
+    def decode(params, cache, cache_len, batch):
+        return lm.decode_step(params, cache, cache_len, batch["tokens"], cfg,
+                              scan_unroll=scan_unroll)
+    return decode

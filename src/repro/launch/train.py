@@ -1,0 +1,115 @@
+"""End-to-end training driver: BPT-CNN outer layer over any assigned arch.
+
+CPU-scale by default (reduced configs + small synthetic corpus) so the same
+driver that launches on a pod runs as a demo here:
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+        --outer agwu --partitioning idpa --rounds 8
+
+On real hardware, ``--mesh pod`` shards each virtual node's step over the
+mesh; here the outer layer (IDPA + AGWU/SGWU — the paper's contribution)
+runs with real jitted steps on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpointing import checkpoint
+from repro.core.bpt_trainer import BPTTrainer
+from repro.core.types import TrainConfig
+from repro.data.pipeline import IDPADataset, host_batch, pack_sequences
+from repro.data.synthetic import lm_corpus
+from repro.models import lm
+from repro.models.frontends import random_frontend_embeds
+
+
+def build_lm_dataset(cfg, seq_len: int, num_rows: int, nodes: int,
+                     batches: int, partitioning: str, frequencies):
+    corpus = lm_corpus(num_rows * seq_len + 1, cfg.vocab_size, seed=0)
+    rows = pack_sequences(corpus, seq_len)
+    return IDPADataset({"rows": rows}, num_nodes=nodes, batches=batches,
+                       frequencies=frequencies, partitioning=partitioning)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b", choices=configs.ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--outer", default="agwu",
+                    choices=["agwu", "sgwu", "sync"])
+    ap.add_argument("--partitioning", default="idpa",
+                    choices=["idpa", "udpa"])
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--rows", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_reduced(args.arch) if args.reduced \
+        else configs.get_config(args.arch)
+    if cfg.arch_type == "encdec":
+        raise SystemExit("use examples/train_bpt_cnn.py or a decoder arch "
+                         "for the LM demo driver")
+    print(f"[train] {cfg.name} ({cfg.arch_type}) reduced={args.reduced} "
+          f"outer={args.outer} partitioning={args.partitioning}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(key, cfg)
+    n_params = sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] params: {n_params/1e6:.1f}M")
+
+    frontend = None
+    if cfg.frontend:
+        frontend = random_frontend_embeds(key, cfg, args.batch_size)
+
+    def loss_fn(p, batch):
+        rows = batch["rows"]
+        b = host_batch(rows)
+        if frontend is not None:
+            b["frontend_embeds"] = frontend[:rows.shape[0]]
+        return lm.loss_fn(p, b, cfg)
+
+    speeds = 1.0 + 0.4 * np.arange(args.nodes) / max(args.nodes - 1, 1)
+    ds = build_lm_dataset(cfg, args.seq_len, args.rows, args.nodes,
+                          batches=min(4, args.rounds),
+                          partitioning=args.partitioning,
+                          frequencies=1.0 / speeds)
+    tc = TrainConfig(learning_rate=args.lr, outer_strategy=args.outer,
+                     partitioning=args.partitioning, outer_nodes=args.nodes,
+                     local_steps=args.local_steps, warmup_steps=5,
+                     total_steps=args.rounds * args.local_steps * args.nodes,
+                     seed=args.seed)
+    trainer = BPTTrainer(loss_fn, params, ds, tc,
+                         batch_size=args.batch_size, speed_factors=speeds)
+    t0 = time.time()
+    report = trainer.train(args.rounds)
+    wall = time.time() - t0
+    print(f"[train] done in {wall:.1f}s wall; report:")
+    print(json.dumps(report.summary(), indent=2, default=str))
+    first, last = report.losses[0], report.losses[-1]
+    print(f"[train] loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    if args.ckpt_dir:
+        path = checkpoint.save(args.ckpt_dir, report.final_params,
+                               step=report.steps,
+                               metadata={"arch": cfg.name})
+        print(f"[train] checkpoint: {path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

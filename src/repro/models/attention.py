@@ -1,0 +1,242 @@
+"""Grouped-query attention: chunked (flash-style) training path + KV-cache
+decode path.
+
+The training path is a pure-jnp blockwise online-softmax attention — the
+same algorithm the Pallas kernel (kernels/flash_attention.py) implements on
+TPU; here it keeps peak memory at O(S * chunk) instead of O(S^2) so 32k
+prefill lowers with sane memory_analysis.  Supports GQA, causal masking,
+sliding windows (as data, so gemma-2's local/global alternation can live
+inside one lax.scan over layers) and gemma-2 attn logit soft-capping.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shardlib import constrain
+
+from .layers import apply_rope, dense, init_dense, softcap
+
+__all__ = ["init_attention", "attention_block", "decode_attention_block",
+           "init_kv_cache", "chunked_attention"]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, dtype=jnp.float32, qk_norm: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": init_dense(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": init_dense(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": init_dense(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((head_dim,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((head_dim,), dtype)}
+    return p
+
+
+def _headwise_rms(x, scale, eps=1e-6):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Blockwise online-softmax attention (training/prefill)
+# ----------------------------------------------------------------------
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window=None, attn_softcap: float = 0.0,
+                      q_chunk: int = 512, k_chunk: int = 1024,
+                      q_offset: int = 0, block_skip: bool = False):
+    """q: (B, Sq, H, D);  k, v: (B, Sk, KH, D)  with H = KH * G.
+
+    ``window``: None/0 = full attention; int or traced scalar = sliding
+    window (token i attends to j in (i-window, i]).
+    Returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // k_chunk)
+    # pad to multiples
+    pq, pk = nq * q_chunk - Sq, nk * k_chunk - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+
+    qg = q.reshape(B, nq, q_chunk, KH, G, D)
+    kg = k.reshape(B, nk, k_chunk, KH, D)
+    vg = v.reshape(B, nk, k_chunk, KH, D)
+
+    win = None
+    if window is not None:
+        win = jnp.asarray(window, jnp.int32)
+
+    def q_block(qi, q_blk):
+        # online softmax over k blocks
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            ki, k_blk, v_blk = inputs
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            # scores: (B, q_chunk, KH, G, k_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            if attn_softcap:
+                s = softcap(s, attn_softcap)
+            mask = (k_pos[None, :] <= Sk - 1)  # padded kv
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if win is not None:
+                mask = mask & (q_pos[:, None] - k_pos[None, :] < win)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, q_chunk, KH, G, D), jnp.float32)
+        m0 = jnp.full((B, q_chunk, KH, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, KH, G), jnp.float32)
+        ks_idx = jnp.arange(nk)
+        kgs = jnp.moveaxis(kg, 1, 0)
+        vgs = jnp.moveaxis(vg, 1, 0)
+        inner_step = jax.checkpoint(kv_step)
+        step = inner_step
+        if block_skip:
+            # skip kv blocks fully outside the (causal, window) band —
+            # lax.cond with a scalar predicate stays a real branch, so
+            # masked-out blocks cost ~0 on TPU (§Perf hc3)
+            def guarded(carry, inputs):
+                ki = inputs[0]
+                k_first = ki * k_chunk
+                k_last = k_first + k_chunk - 1
+                q_first = q_offset + qi * q_chunk
+                q_last = q_first + q_chunk - 1
+                live = jnp.asarray(True)
+                if causal:
+                    live = live & (k_first <= q_last)
+                if win is not None:
+                    live = live & (k_last > q_first - win)
+                return jax.lax.cond(live, inner_step,
+                                    lambda c, _: (c, None), carry, inputs)
+            step = guarded
+        (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                      (ks_idx, kgs, vgs))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out.astype(q.dtype)
+
+    qi_idx = jnp.arange(nq)
+    qgs = jnp.moveaxis(qg, 1, 0)                   # (nq, B, qc, KH, G, D)
+    outs = jax.lax.map(lambda args: q_block(*args), (qi_idx, qgs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+# ----------------------------------------------------------------------
+# Full attention block (projections + rope + attention)
+# ----------------------------------------------------------------------
+def attention_block(params, x, positions, cfg, *, window=None,
+                    causal: bool = True, kv_source=None):
+    """x: (B, S, d_model). kv_source: cross-attention memory (B, Sk, d)."""
+    B, S, _ = x.shape
+    H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_source is None else kv_source
+    q = dense(params["wq"], x).reshape(B, S, H, D)
+    k = dense(params["wk"], src).reshape(B, src.shape[1], KH, D)
+    v = dense(params["wv"], src).reshape(B, src.shape[1], KH, D)
+    if "q_norm" in params:
+        q = _headwise_rms(q, params["q_norm"]["scale"])
+        k = _headwise_rms(k, params["k_norm"]["scale"])
+    if kv_source is None:  # self-attention: rotary on both
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_kv_gather:
+        # ring-attention-lite (§Perf hc1 H6): q and the attention output
+        # stay sequence-sharded (no x/out seq transitions); only K/V —
+        # kv_dim << d_model under GQA — are gathered to full sequence.
+        q = constrain(q, "batch", "seq", None, None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    else:
+        # SP<->TP boundary: attention runs head-sharded so its inner chunk
+        # loops are collective-free (the all-to-all lives here, per layer)
+        q = constrain(q, "batch", None, "heads", None)
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            attn_softcap=cfg.attn_softcap,
+                            q_chunk=cfg.attn_q_chunk or 512,
+                            k_chunk=cfg.attn_k_chunk or 1024,
+                            block_skip=cfg.attn_block_skip)
+    out = constrain(out, "batch", "seq", None, None) if cfg.attn_kv_gather \
+        else constrain(out, "batch", None, "heads", None)
+    return dense(params["wo"], out.reshape(B, S, H * D)), (k, v)
+
+
+# ----------------------------------------------------------------------
+# Decode path (1 new token against a KV cache)
+# ----------------------------------------------------------------------
+def init_kv_cache(batch: int, seq_len: int, num_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, seq_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, seq_len, num_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_attention_block(params, x, cache, cache_len, cfg, *, window=None):
+    """x: (B, 1, d_model); cache k/v: (B, S, KH, D); cache_len: scalar int —
+    number of valid tokens already in the cache.  Returns (out, new_cache).
+    """
+    B, _, _ = x.shape
+    H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KH
+    S = cache["k"].shape[1]
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    q = dense(params["wq"], x).reshape(B, 1, H, D)
+    k = dense(params["wk"], x).reshape(B, 1, KH, D)
+    v = dense(params["wv"], x).reshape(B, 1, KH, D)
+    if "q_norm" in params:
+        q = _headwise_rms(q, params["q_norm"]["scale"])
+        k = _headwise_rms(k, params["k_norm"]["scale"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, ck,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(D)
+    if cfg.attn_softcap:
+        s = softcap(s, cfg.attn_softcap)
+    k_pos = jnp.arange(S)
+    mask = k_pos[None, :] <= cache_len
+    if window is not None:
+        mask = mask & (cache_len - k_pos[None, :] < jnp.asarray(window, jnp.int32))
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    out = dense(params["wo"], o.reshape(B, 1, H * D).astype(x.dtype))
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,169 @@
+"""Decoder block variants: dense / moe / ssm / hybrid — train & decode paths.
+
+Each block is a pure function of (params, x, ...) so layer stacks can be
+``lax.scan``-ed over stacked params (keeps HLO compact for the 512-device
+dry-run).  Per-layer heterogeneity (gemma-2 local/global windows, hymba
+global layers) is passed as *data* (a per-layer window scalar), not
+structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_block, decode_attention_block,
+                        init_attention, init_kv_cache)
+from .layers import init_mlp, init_rms_norm, mlp, rms_norm
+from .mamba import (init_mamba, init_mamba_cache, mamba_decode_step,
+                    mamba_mixer)
+from .moe import init_moe, moe_layer
+
+__all__ = ["init_block", "block_forward", "block_decode", "init_block_cache",
+           "layer_windows"]
+
+GLOBAL_WINDOW = jnp.iinfo(jnp.int32).max // 2   # "no window"
+
+
+def layer_windows(cfg, num_layers=None):
+    """Per-layer sliding-window sizes as an (L,) int32 array.
+
+    gemma-2 style: with ``window_pattern`` p, every p-th layer is global;
+    others use ``sliding_window``.  Without a pattern, all layers share
+    ``sliding_window`` (or full attention when it is 0).
+    """
+    L = num_layers if num_layers is not None else cfg.num_layers
+    if cfg.sliding_window <= 0:
+        return jnp.full((L,), GLOBAL_WINDOW, jnp.int32)
+    idx = jnp.arange(L)
+    if cfg.global_layers:
+        is_global = jnp.isin(idx, jnp.asarray(cfg.global_layers))
+        return jnp.where(is_global, GLOBAL_WINDOW, cfg.sliding_window)
+    if cfg.window_pattern > 0:
+        is_global = (idx % cfg.window_pattern) == (cfg.window_pattern - 1)
+        return jnp.where(is_global, GLOBAL_WINDOW, cfg.sliding_window)
+    return jnp.full((L,), cfg.sliding_window, jnp.int32)
+
+
+# ----------------------------------------------------------------------
+def init_block(key, cfg, dtype=jnp.float32):
+    """One layer's params; vmap over layer keys to build the stacked tree."""
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p = {"ln1": init_rms_norm(d, dtype)}
+    t = cfg.arch_type
+    if t in ("dense", "vlm", "audio", "moe", "hybrid", "encdec"):
+        p["attn"] = init_attention(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.head_dim, dtype, qk_norm=cfg.qk_norm)
+    if t in ("ssm", "hybrid"):
+        p["mamba"] = init_mamba(ks[1], d, cfg.ssm_heads, cfg.ssm_head_dim,
+                                cfg.ssm_state, cfg.conv_kernel, dtype)
+    if t == "hybrid":
+        p["beta_attn"] = jnp.ones((d,), dtype)
+        p["beta_ssm"] = jnp.ones((d,), dtype)
+        p["bn_attn"] = init_rms_norm(d, dtype)
+        p["bn_ssm"] = init_rms_norm(d, dtype)
+    if t == "moe":
+        p["ln2"] = init_rms_norm(d, dtype)
+        p["moe"] = init_moe(ks[2], d, cfg.num_experts, cfg.expert_d_ff, dtype)
+    elif t != "ssm" and cfg.d_ff > 0:
+        p["ln2"] = init_rms_norm(d, dtype)
+        p["mlp"] = init_mlp(ks[3], d, cfg.d_ff, dtype)
+    if cfg.post_norm:
+        p["pn1"] = init_rms_norm(d, dtype)
+        if "ln2" in p:
+            p["pn2"] = init_rms_norm(d, dtype)
+    return p
+
+
+# ----------------------------------------------------------------------
+def block_forward(params, x, positions, cfg, window=None):
+    """Training/prefill path. Returns (x, kv_cache_or_None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    t = cfg.arch_type
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+
+    if t == "hybrid":
+        attn_out, kv = attention_block(params["attn"], h, positions, cfg,
+                                       window=window)
+        ssm_out = mamba_mixer(params["mamba"], h, cfg)
+        attn_out = rms_norm(params["bn_attn"], attn_out, cfg.norm_eps) \
+            * params["beta_attn"].astype(x.dtype)
+        ssm_out = rms_norm(params["bn_ssm"], ssm_out, cfg.norm_eps) \
+            * params["beta_ssm"].astype(x.dtype)
+        mix = 0.5 * (attn_out + ssm_out)
+        x = x + mix
+    elif t == "ssm":
+        x = x + mamba_mixer(params["mamba"], h, cfg)
+    else:
+        attn_out, kv = attention_block(params["attn"], h, positions, cfg,
+                                       window=window)
+        if cfg.post_norm:
+            attn_out = rms_norm(params["pn1"], attn_out, cfg.norm_eps)
+        x = x + attn_out
+
+    if "moe" in params:
+        h2 = rms_norm(params["ln2"], x, cfg.norm_eps)
+        moe_out, aux = moe_layer(params["moe"], h2, cfg)
+        x = x + moe_out
+    elif "mlp" in params:
+        h2 = rms_norm(params["ln2"], x, cfg.norm_eps)
+        mlp_out = mlp(params["mlp"], h2, cfg.activation,
+                      megatron=cfg.mlp_megatron)
+        if cfg.post_norm:
+            mlp_out = rms_norm(params["pn2"], mlp_out, cfg.norm_eps)
+        x = x + mlp_out
+    return x, kv, aux
+
+
+# ----------------------------------------------------------------------
+def init_block_cache(batch, seq_len, cfg, dtype=jnp.bfloat16):
+    """Per-layer decode cache (stacked over layers by the caller)."""
+    c = {}
+    t = cfg.arch_type
+    if t != "ssm":
+        c["kv"] = init_kv_cache(batch, seq_len, cfg.num_kv_heads,
+                                cfg.head_dim, dtype)
+    if t in ("ssm", "hybrid"):
+        c["mamba"] = init_mamba_cache(batch, cfg, dtype)
+    return c
+
+
+def block_decode(params, x, cache, cache_len, cfg, window=None):
+    """Single-token decode. Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    t = cfg.arch_type
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+
+    if t == "hybrid":
+        attn_out, new_cache["kv"] = decode_attention_block(
+            params["attn"], h, cache["kv"], cache_len, cfg, window=window)
+        ssm_out, new_cache["mamba"] = mamba_decode_step(
+            params["mamba"], h, cache["mamba"], cfg)
+        attn_out = rms_norm(params["bn_attn"], attn_out, cfg.norm_eps) \
+            * params["beta_attn"].astype(x.dtype)
+        ssm_out = rms_norm(params["bn_ssm"], ssm_out, cfg.norm_eps) \
+            * params["beta_ssm"].astype(x.dtype)
+        x = x + 0.5 * (attn_out + ssm_out)
+    elif t == "ssm":
+        out, new_cache["mamba"] = mamba_decode_step(
+            params["mamba"], h, cache["mamba"], cfg)
+        x = x + out
+    else:
+        attn_out, new_cache["kv"] = decode_attention_block(
+            params["attn"], h, cache["kv"], cache_len, cfg, window=window)
+        if cfg.post_norm:
+            attn_out = rms_norm(params["pn1"], attn_out, cfg.norm_eps)
+        x = x + attn_out
+
+    if "moe" in params:
+        h2 = rms_norm(params["ln2"], x, cfg.norm_eps)
+        moe_out, _ = moe_layer(params["moe"], h2, cfg)
+        x = x + moe_out
+    elif "mlp" in params:
+        h2 = rms_norm(params["ln2"], x, cfg.norm_eps)
+        mlp_out = mlp(params["mlp"], h2, cfg.activation)
+        if cfg.post_norm:
+            mlp_out = rms_norm(params["pn2"], mlp_out, cfg.norm_eps)
+        x = x + mlp_out
+    return x, new_cache

@@ -1,0 +1,119 @@
+"""The paper's CNN (feature extractor + fully-connected classifier, §3.1).
+
+Configurable to the seven network scales of Table 2.  Forward convolutions
+route through ``repro.kernels.ops.conv2d`` (Pallas kernel on TPU, jnp ref on
+CPU).  The training objective is the paper's squared error over output
+neurons (Eq. 16); gradients via jax.grad implement Eq. 17-23 exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CNNConfig", "init_cnn", "cnn_forward", "cnn_loss", "cnn_accuracy",
+           "TABLE2_CASES", "make_case"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    image_size: int = 32
+    in_channels: int = 3
+    conv_layers: int = 2            # layers(Conv) in Table 2
+    filters: int = 4                # filters(Conv)
+    filter_size: int = 3
+    fc_layers: int = 3              # layers(FC)
+    fc_neurons: int = 500           # neurons(FC)
+    num_classes: int = 10
+    pool_every: int = 1             # 2x2 max-pool after every conv
+
+
+# Table 2 of the paper
+_T2 = {
+    "case1": (2, 4, 3, 500), "case2": (4, 4, 3, 1000),
+    "case3": (6, 8, 5, 1500), "case4": (8, 8, 5, 1500),
+    "case5": (8, 10, 7, 2000), "case6": (10, 10, 7, 2000),
+    "case7": (10, 12, 7, 2000),
+}
+TABLE2_CASES = tuple(_T2)
+
+
+def make_case(case: str, image_size: int = 32, num_classes: int = 10,
+              in_channels: int = 3) -> CNNConfig:
+    cl, f, fl, n = _T2[case]
+    # deep cases can't pool every layer at 32px; pool only while >= 8px
+    return CNNConfig(name=case, image_size=image_size,
+                     in_channels=in_channels, conv_layers=cl, filters=f,
+                     fc_layers=fl, fc_neurons=n, num_classes=num_classes)
+
+
+def _conv_shapes(cfg: CNNConfig):
+    """Per-layer (in_ch, out_ch, spatial, pooled) with same-padding convs."""
+    shapes = []
+    size, cin = cfg.image_size, cfg.in_channels
+    for i in range(cfg.conv_layers):
+        pooled = size >= 8          # stop pooling below 8 px
+        shapes.append((cin, cfg.filters, size, pooled))
+        if pooled:
+            size //= 2
+        cin = cfg.filters
+    return shapes, size
+
+
+def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32):
+    shapes, final = _conv_shapes(cfg)
+    params = {"conv": [], "fc": []}
+    keys = jax.random.split(key, cfg.conv_layers + cfg.fc_layers)
+    for i, (cin, cout, _, _) in enumerate(shapes):
+        fan = cin * cfg.filter_size ** 2
+        params["conv"].append({
+            "w": jax.random.normal(keys[i], (cfg.filter_size, cfg.filter_size,
+                                             cin, cout), dtype)
+            * jnp.sqrt(2.0 / fan),
+            "b": jnp.zeros((cout,), dtype),
+        })
+    d_in = final * final * cfg.filters
+    dims = [d_in] + [cfg.fc_neurons] * (cfg.fc_layers - 1) + [cfg.num_classes]
+    for j in range(cfg.fc_layers):
+        k = keys[cfg.conv_layers + j]
+        params["fc"].append({
+            "w": jax.random.normal(k, (dims[j], dims[j + 1]), dtype)
+            * jnp.sqrt(2.0 / dims[j]),
+            "b": jnp.zeros((dims[j + 1],), dtype),
+        })
+    return params
+
+
+def cnn_forward(params, images, cfg: CNNConfig):
+    """images: (B, H, W, C) -> logits (B, classes)."""
+    from repro.kernels import ops
+    x = images
+    shapes, _ = _conv_shapes(cfg)
+    for p, (_, _, _, pooled) in zip(params["conv"], shapes):
+        x = ops.conv2d(x, p["w"], padding="SAME") + p["b"]
+        x = jax.nn.relu(x)
+        if pooled:
+            x = ops.max_pool2d(x, window=2, stride=2)
+    x = x.reshape(x.shape[0], -1)
+    for j, p in enumerate(params["fc"]):
+        x = x @ p["w"] + p["b"]
+        if j < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def cnn_loss(params, batch, cfg: CNNConfig):
+    """Paper's Eq. 16: squared error over output neurons (one-hot labels)."""
+    logits = cnn_forward(params, batch["images"], cfg)
+    y = jax.nn.one_hot(batch["labels"], cfg.num_classes, dtype=logits.dtype)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.mean(jnp.sum((y - probs) ** 2, axis=-1))
+
+
+def cnn_accuracy(params, batch, cfg: CNNConfig):
+    logits = cnn_forward(params, batch["images"], cfg)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                    .astype(jnp.float32))

@@ -1,0 +1,175 @@
+"""Encoder-decoder transformer (SeamlessM4T-v2 backbone, arXiv:2308.11596).
+
+The speech frontend (mel + conformer feature extractor) is stubbed per the
+assignment carve-out: the encoder consumes precomputed frame embeddings
+(B, S_enc, d_model).  Encoder = non-causal self-attention blocks; decoder =
+causal self-attention + cross-attention + gated MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_block, decode_attention_block,
+                        init_attention, init_kv_cache)
+from .layers import (dense, embed, init_dense, init_embedding, init_mlp,
+                     init_rms_norm, mlp, rms_norm)
+from .lm import chunked_cross_entropy
+
+__all__ = ["init_encdec_params", "encdec_forward", "encdec_loss_fn",
+           "init_encdec_cache", "encdec_decode_step", "encode"]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.head_dim, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "self_attn": init_attention(k1, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.head_dim, dtype),
+        "lnx": init_rms_norm(cfg.d_model, dtype),
+        "cross_attn": init_attention(k2, cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.head_dim, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec_params(key, cfg):
+    pdt = jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.num_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "frontend_proj": init_dense(kp, cfg.d_model, cfg.d_model, pdt),
+        "embed": init_embedding(kt, cfg.vocab_size, cfg.d_model, pdt),
+        "encoder": jax.vmap(lambda k: _init_enc_layer(k, cfg, pdt))(enc_keys),
+        "enc_norm": init_rms_norm(cfg.d_model, pdt),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(k, cfg, pdt))(dec_keys),
+        "final_norm": init_rms_norm(cfg.d_model, pdt),
+    }
+
+
+def embed_tokens(params, tokens, cfg):
+    return embed(params["embed"], tokens).astype(_dtype(cfg))
+
+
+def encode(params, frame_embeds, cfg, scan_unroll=False):
+    """frame_embeds: (B, S_enc, d_model) -> encoder memory."""
+    dt = _dtype(cfg)
+    x = dense(params["frontend_proj"], frame_embeds.astype(dt))
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, lp):
+        h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+        a, _ = attention_block(lp["attn"], h, pos, cfg, causal=False)
+        x = x + a
+        h = rms_norm(lp["ln2"], x, cfg.norm_eps)
+        return x + mlp(lp["mlp"], h, cfg.activation), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"],
+                        unroll=cfg.num_encoder_layers if scan_unroll else 1)
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _decode_stack(params, x, memory, cfg, scan_unroll=False):
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, lp):
+        h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+        a, _ = attention_block(lp["self_attn"], h, pos, cfg, causal=True)
+        x = x + a
+        h = rms_norm(lp["lnx"], x, cfg.norm_eps)
+        c, _ = attention_block(lp["cross_attn"], h, pos, cfg, causal=False,
+                               kv_source=memory)
+        x = x + c
+        h = rms_norm(lp["ln2"], x, cfg.norm_eps)
+        return x + mlp(lp["mlp"], h, cfg.activation), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"],
+                        unroll=cfg.num_layers if scan_unroll else 1)
+    return rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def encdec_forward(params, frame_embeds, tokens, cfg, scan_unroll=False):
+    memory = encode(params, frame_embeds, cfg, scan_unroll)
+    x = embed(params["embed"], tokens).astype(_dtype(cfg))
+    return _decode_stack(params, x, memory, cfg, scan_unroll)
+
+
+def encdec_loss_fn(params, batch, cfg, scan_unroll=False):
+    hidden = encdec_forward(params, batch["frontend_embeds"],
+                            batch["tokens"], cfg, scan_unroll)
+    ce = chunked_cross_entropy(hidden, params["embed"]["table"],
+                               batch["labels"], cfg)
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+# ----------------------------------------------------------------------
+# Serving: self-attn KV cache + precomputed cross K/V
+# ----------------------------------------------------------------------
+def init_encdec_cache(cfg, batch: int, max_seq: int, enc_len: int,
+                      dtype=jnp.bfloat16):
+    def one(_):
+        return {
+            "kv": init_kv_cache(batch, max_seq, cfg.num_kv_heads,
+                                cfg.head_dim, dtype),
+            "cross_k": jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                  cfg.head_dim), dtype),
+            "cross_v": jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                  cfg.head_dim), dtype),
+        }
+    return jax.vmap(one)(jnp.arange(cfg.num_layers))
+
+
+def encdec_decode_step(params, cache, cache_len, tokens, cfg,
+                       scan_unroll=False):
+    """One decoder token against self-cache + precomputed cross K/V."""
+    dt = _dtype(cfg)
+    x = embed(params["embed"], tokens).astype(dt)
+    H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KH
+
+    def body(x, layer_in):
+        lp, lc = layer_in
+        new_c = dict(lc)
+        h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+        a, new_c["kv"] = decode_attention_block(lp["self_attn"], h,
+                                                lc["kv"], cache_len, cfg)
+        x = x + a
+        # cross-attention over the full (precomputed) encoder memory
+        h = rms_norm(lp["lnx"], x, cfg.norm_eps)
+        B = x.shape[0]
+        q = dense(lp["cross_attn"]["wq"], h).reshape(B, KH, G, D)
+        s = jnp.einsum("bhgd,bkhd->bhgk", q, lc["cross_k"],
+                       preferred_element_type=jnp.float32) / jnp.sqrt(D)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(lc["cross_v"].dtype),
+                       lc["cross_v"])
+        c = dense(lp["cross_attn"]["wo"], o.reshape(B, 1, H * D).astype(dt))
+        x = x + c
+        h = rms_norm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h, cfg.activation)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache),
+                                unroll=cfg.num_layers if scan_unroll else 1)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["embed"]["table"].astype(dt).T
+    return logits.astype(jnp.float32), new_cache

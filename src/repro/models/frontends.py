@@ -1,0 +1,28 @@
+"""Stub modality frontends (assignment carve-out).
+
+``[audio]`` and ``[vlm]`` architectures specify the transformer backbone
+only; the mel-spectrogram/conv feature extractor (audio) and ViT/SigLIP
+encoder (vision) are stubs that provide *precomputed* frame/patch embeddings
+of the right shape.  These helpers build the ShapeDtypeStructs / random
+stand-ins the pipelines and dry-run use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["frontend_embed_shape", "random_frontend_embeds"]
+
+
+def frontend_embed_shape(cfg, batch: int):
+    """(B, P, d_model) for P frontend tokens (patches or audio frames)."""
+    if not cfg.frontend:
+        return None
+    return (batch, cfg.num_frontend_tokens, cfg.d_model)
+
+
+def random_frontend_embeds(key, cfg, batch: int, dtype=jnp.bfloat16):
+    shape = frontend_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    return jax.random.normal(key, shape, dtype) * 0.02

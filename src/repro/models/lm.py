@@ -1,0 +1,198 @@
+"""Decoder-only language model: init / forward / loss / prefill / decode.
+
+Layer stacks are ``lax.scan`` over params stacked on a leading layer axis
+(init via vmap) so the lowered HLO stays compact at 512 devices.  The loss
+is a sequence-chunked cross-entropy: logits are never materialised for the
+full sequence (vocab up to 256k would otherwise dominate memory).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shardlib import constrain
+
+from .blocks import (block_decode, block_forward, init_block,
+                     init_block_cache, layer_windows)
+from .layers import embed, init_embedding, init_rms_norm, rms_norm, softcap
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
+           "chunked_cross_entropy"]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_params(key, cfg):
+    pdt = jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    params = {
+        "embed": init_embedding(k_embed, cfg.vocab_size, cfg.d_model, pdt),
+        "layers": jax.vmap(lambda k: init_block(k, cfg, pdt))(layer_keys),
+        "final_norm": init_rms_norm(cfg.d_model, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(k_head, cfg.vocab_size,
+                                           cfg.d_model, pdt)
+    if cfg.frontend:
+        # stub modality projector (ViT/audio-codec outputs -> d_model)
+        params["frontend_proj"] = {
+            "w": jax.random.normal(k_head, (cfg.d_model, cfg.d_model), pdt)
+            * (1.0 / jnp.sqrt(cfg.d_model))}
+    return params
+
+
+def _head_table(params):
+    return params.get("lm_head", params["embed"])["table"]
+
+
+# ----------------------------------------------------------------------
+def forward(params, tokens, cfg, frontend_embeds=None, collect_cache=False,
+            remat=False, scan_unroll=False):
+    """tokens: (B, S_text) int32; frontend_embeds: (B, P, d_model) or None.
+
+    Returns (hidden (B,S,d), stacked kv cache or None, aux_loss).
+    """
+    dt = _dtype(cfg)
+    if cfg.embed_onehot:
+        # one-hot matmul lookup (MaxText-style): contraction over the
+        # vocab-sharded dim -> psum(x) instead of a full-table all-gather,
+        # and d_table comes out naturally vocab-sharded in the backward
+        # (kills the full-size dtable all-reduce; §Perf hc1 H7)
+        table = params["embed"]["table"]
+        oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=dt)
+        oh = constrain(oh, "batch", None, "vocab")
+        x = (oh @ table.astype(dt))
+    elif cfg.embed_reshard:
+        # reshard the vocab-sharded table to d-sharded (one cheap
+        # all-to-all of table_bytes/16) so the token gather is local —
+        # instead of GSPMD's full-table all-gather (§Perf hc1 H5)
+        table = constrain(params["embed"]["table"], None, "tp")
+        x = jnp.take(table, tokens, axis=0).astype(dt)
+        x = constrain(x, "batch", None, "tp")
+    else:
+        x = embed(params["embed"], tokens).astype(dt)
+    if frontend_embeds is not None:
+        fe = frontend_embeds.astype(dt) @ params["frontend_proj"]["w"].astype(dt)
+        x = jnp.concatenate([fe, x], axis=1)
+    B, S, _ = x.shape
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    windows = layer_windows(cfg)
+
+    def block(lp, x, win):
+        # sequence-sharded at the layer boundary (Megatron-SP style): the
+        # scan carry — the only full-activation residency — stays 1/|model|
+        if cfg.bf16_params_compute:
+            # barrier anchors the convert so GSPMD's weight all-gathers
+            # move bf16, not the f32 originals (gather/convert otherwise
+            # commute and the gather goes first — measured 2x traffic)
+            lp = jax.tree_util.tree_map(
+                lambda p: jax.lax.optimization_barrier(p.astype(dt))
+                if p.ndim >= 2 else p, lp)
+        x = constrain(x, "batch", "seq", "embed")
+        x, kv, a = block_forward(lp, x, positions, cfg, window=win)
+        return constrain(x, "batch", "seq", "embed"), kv, a
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, layer_in):
+        x, aux = carry
+        lp, win = layer_in
+        x, kv, a = block(lp, x, win)
+        ys = kv if collect_cache else None
+        return (x, aux + a), ys
+
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], windows), unroll=cfg.num_layers if scan_unroll else 1)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, caches, aux
+
+
+def chunked_cross_entropy(hidden, head_table, labels, cfg, chunk: int = 0):
+    """Mean CE over (B,S) without materialising (B,S,V) at once."""
+    B, S, D = hidden.shape
+    chunk = min(chunk or cfg.ce_chunk or 512, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = jnp.moveaxis(hidden.reshape(B, nc, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    table = head_table.astype(hidden.dtype)
+
+    @jax.checkpoint
+    def ce_chunk(carry, inp):
+        h, l = inp
+        logits = constrain(h @ table.T, "batch", None, "vocab")
+        if cfg.final_softcap:
+            logits = softcap(logits, cfg.final_softcap)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        valid = (l >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(ce_chunk, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch, cfg, aux_weight: float = 0.01, remat: bool = False,
+            scan_unroll: bool = False):
+    """batch: {'tokens': (B,S), 'labels': (B,S), ['frontend_embeds']}."""
+    hidden, _, aux = forward(params, batch["tokens"], cfg,
+                             frontend_embeds=batch.get("frontend_embeds"),
+                             remat=remat, scan_unroll=scan_unroll)
+    labels = batch["labels"]
+    if "frontend_embeds" in batch and batch["frontend_embeds"] is not None:
+        # frontend positions carry no next-token loss
+        P = batch["frontend_embeds"].shape[1]
+        pad = jnp.full((labels.shape[0], P), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = chunked_cross_entropy(hidden, _head_table(params), labels, cfg)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------------
+# Serving
+# ----------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Stacked-over-layers decode cache."""
+    def one(_):
+        return init_block_cache(batch, max_seq, cfg, dtype)
+    return jax.vmap(one)(jnp.arange(cfg.num_layers))
+
+
+def decode_step(params, cache, cache_len, tokens, cfg, scan_unroll=False):
+    """tokens: (B, 1) int32; cache_len: scalar int32 count of valid tokens.
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    dt = _dtype(cfg)
+    x = embed(params["embed"], tokens).astype(dt)
+    windows = layer_windows(cfg)
+
+    def body(x, layer_in):
+        lp, lc, win = layer_in
+        x, new_c = block_decode(lp, x, lc, cache_len, cfg, window=win)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, windows),
+                                unroll=cfg.num_layers if scan_unroll else 1)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ _head_table(params).astype(dt).T
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,232 @@
+"""Mamba-2 mixer via State-Space Duality (SSD), arXiv:2405.21060.
+
+Chunked (block-decomposed) SSD: within-chunk terms are computed as a masked
+attention-like matmul (the "dual" quadratic form, MXU-friendly); across-chunk
+terms are a linear recurrence over per-chunk states (lax.scan / associative
+scan).  Decode is the classic O(1) state update.
+
+This is the TPU-native adaptation of the paper's inner-layer task
+decomposition for attention-free architectures: the (chunk × head) grid plays
+the role of the conv output-element grid (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, init_dense
+
+__all__ = ["init_mamba", "mamba_mixer", "mamba_decode_step",
+           "init_mamba_cache", "ssd_chunked", "ssd_reference"]
+
+
+# ----------------------------------------------------------------------
+# Parameter init
+# ----------------------------------------------------------------------
+def init_mamba(key, d_model: int, ssm_heads: int, ssm_head_dim: int,
+               ssm_state: int, conv_kernel: int = 4, dtype=jnp.float32):
+    """In-projection produces [z (gate), x, B, C, dt]; single group (G=1)."""
+    H, P, N = ssm_heads, ssm_head_dim, ssm_state
+    d_inner = H * P
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_dim = 2 * d_inner + 2 * N + H
+    conv_dim = d_inner + 2 * N
+    return {
+        "in_proj": init_dense(k1, d_model, proj_dim, dtype),
+        "conv_w": jax.random.normal(k2, (conv_kernel, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, float(H), H).astype(dtype)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": init_dense(k4, d_inner, d_model, dtype),
+    }
+
+
+def _split_proj(zxbcdt, H, P, N):
+    d_inner = H * P
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    B = zxbcdt[..., 2 * d_inner:2 * d_inner + N]
+    C = zxbcdt[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, x, B, C, dt
+
+
+# ----------------------------------------------------------------------
+# SSD core
+# ----------------------------------------------------------------------
+def ssd_reference(x, dt, A, B, C, D):
+    """Sequential O(L) reference recurrence (oracle for tests).
+
+    x: (b, L, H, P); dt: (b, L, H); A: (H,) < 0; B, C: (b, L, N); D: (H,).
+    Returns y: (b, L, H, P).
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                       # (b,H,P),(b,H),(b,N),(b,N)
+        dA = jnp.exp(dtt * A)                       # (b,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    s0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    return (y + x.astype(jnp.float32) * D[:, None]).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int = 256):
+    """Chunked SSD (Mamba-2 Alg. with block decomposition).
+
+    Same signature/semantics as ``ssd_reference``; O(L/Q) sequential steps,
+    each an MXU-friendly quadratic form over a Q-token chunk.
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    nc = -(-L // Q)
+    pad = nc * Q - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(b, nc, Q, H).astype(f32)
+    Bc = B.reshape(b, nc, Q, N).astype(f32)
+    Cc = C.reshape(b, nc, Q, N).astype(f32)
+
+    dA = dtc * A                                    # (b,nc,Q,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumulative
+    total = cum[:, :, -1:, :]                       # (b,nc,1,H)
+
+    # ---- intra-chunk (dual quadratic form) ----
+    # M[i,j] = exp(cum_i - cum_j) for i >= j  (segment-sum mask)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (b,nc,Q,Q,H)
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # (b,nc,Q,Q)
+    scores = scores[..., None] * Lmat * dtc[:, :, None, :, :]  # ×dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xc)
+
+    # ---- chunk states ----
+    # S_c = sum_j exp(total - cum_j) * dt_j * B_j ⊗ x_j   : (b,nc,H,N,P)
+    decay_to_end = jnp.exp(total - cum)                      # (b,nc,Q,H)
+    Sc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                    decay_to_end * dtc, Bc, xc)
+
+    # ---- inter-chunk recurrence over nc chunks ----
+    chunk_decay = jnp.exp(total[:, :, 0, :])                 # (b,nc,H)
+
+    def chain(prev, inp):
+        dec, s_local = inp                                   # (b,H),(b,H,N,P)
+        new = prev * dec[..., None, None] + s_local
+        return new, prev                                     # emit state *before* chunk
+
+    s0 = jnp.zeros((b, H, N, P), f32)
+    _, prev_states = jax.lax.scan(
+        chain, s0, (jnp.moveaxis(chunk_decay, 1, 0),
+                    jnp.moveaxis(Sc, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (b,nc,H,N,P)
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(cum)                          # (b,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bchnp->bcihp",
+                         Cc, prev_states) * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(b, nc * Q, H, P)[:, :L]
+    return (y + x.reshape(b, nc * Q, H, P)[:, :L] * D[:, None]).astype(jnp.float32).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Full mixer (projections + causal conv + SSD + gate)
+# ----------------------------------------------------------------------
+def _causal_conv(x, w, b):
+    """x: (B, L, Cdim); w: (k, Cdim) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def mamba_mixer(params, x, cfg, chunk: int = 0):
+    """x: (B, L, d_model) -> (B, L, d_model)."""
+    chunk = chunk or cfg.ssd_chunk or 256
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Bsz, L, _ = x.shape
+    zxbcdt = dense(params["in_proj"], x)
+    z, xs, Bv, Cv, dt = _split_proj(zxbcdt, H, P, N)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"].astype(x.dtype),
+                            params["conv_b"].astype(x.dtype))
+    xs = conv_out[..., :H * P].reshape(Bsz, L, H, P)
+    Bv = conv_out[..., H * P:H * P + N]
+    Cv = conv_out[..., H * P + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xs, dt, A, Bv, Cv, params["D"].astype(jnp.float32),
+                    chunk=chunk)
+    y = y.reshape(Bsz, L, H * P)
+    # gated RMSNorm (mamba2's norm-before-gate)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * params["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return dense(params["out_proj"], y)
+
+
+# ----------------------------------------------------------------------
+# Decode (O(1) per token)
+# ----------------------------------------------------------------------
+def init_mamba_cache(batch: int, cfg, dtype=jnp.float32):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = H * P + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    }
+
+
+def mamba_decode_step(params, x, cache, cfg):
+    """x: (B, 1, d_model); cache: {'ssm': (B,H,P,N), 'conv': (B,k-1,Cd)}."""
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Bsz = x.shape[0]
+    zxbcdt = dense(params["in_proj"], x)[:, 0]      # (B, proj)
+    z, xs, Bv, Cv, dt = _split_proj(zxbcdt, H, P, N)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)    # (B, Cd)
+    hist = jnp.concatenate([cache["conv"],
+                            conv_in[:, None, :].astype(cache["conv"].dtype)],
+                           axis=1)                      # (B, k, Cd)
+    w = params["conv_w"].astype(hist.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w)
+                           + params["conv_b"].astype(hist.dtype))
+    xs = conv_out[..., :H * P].reshape(Bsz, H, P).astype(jnp.float32)
+    Bv = conv_out[..., H * P:H * P + N].astype(jnp.float32)
+    Cv = conv_out[..., H * P + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                             # (B,H)
+    state = cache["ssm"] * dA[..., None, None] + \
+        jnp.einsum("bh,bn,bhp->bhpn", dt, Bv, xs)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv) + \
+        xs * params["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(Bsz, H * P)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(params["out_proj"], y[:, None, :])
+    new_cache = {"ssm": state, "conv": hist[:, 1:, :]}
+    return out, new_cache

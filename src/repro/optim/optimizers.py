@@ -1,0 +1,113 @@
+"""Optimizers (SGD / momentum / AdamW) and LR schedules — pytree-native.
+
+Pure functions: ``init(params) -> state``; ``update(grads, state, params,
+lr) -> (updates, state)``; apply with ``apply_updates``.  AdamW is the
+dry-run default (its 2x f32 moments are part of the memory roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd", "momentum", "adamw", "apply_updates", "global_norm",
+           "clip_by_global_norm", "warmup_cosine", "make_optimizer"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable        # (grads, state, params, lr) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+# ----------------------------------------------------------------------
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        new_v = jax.tree_util.tree_map(
+            lambda v, g: beta * v + g.astype(jnp.float32), state, grads)
+        upd = jax.tree_util.tree_map(lambda v: -lr * v, new_v)
+        return upd, new_v
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda m, n, p: -lr * ((m / c1) / (jnp.sqrt(n / c2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            mu, nu, params)
+        return upd, {"mu": mu, "nu": nu, "count": count}
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd()
+    if name == "momentum":
+        return momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise ValueError(name)
+
+
+# ----------------------------------------------------------------------
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule

@@ -1,0 +1,22 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see ONE device;
+only launch/dryrun.py (run as a subprocess) forces 512 placeholder devices.
+"""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def assert_no_nans(tree):
+    import jax.numpy as jnp
+    for leaf in jax.tree_util.tree_leaves(tree):
+        assert not bool(jnp.isnan(leaf).any()), "NaN leaf"

@@ -1,0 +1,87 @@
+"""Event-driven cluster simulator: paper-claim reproduction at metric level."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cluster_sim import ClusterSim, make_heterogeneous_speeds
+
+
+def run(strategy, partitioning, m=6, N=6000, K=8, A=4, spread=0.8, seed=0,
+        idpa_mode="paper"):
+    t = make_heterogeneous_speeds(m, spread, seed)
+    sim = ClusterSim(N, t, iterations=K, batches=A, strategy=strategy,
+                     partitioning=partitioning, idpa_mode=idpa_mode)
+    return sim.run()
+
+
+class TestSyncWait:
+    def test_agwu_has_zero_sync_wait(self):
+        assert run("agwu", "idpa").sync_wait == 0.0
+
+    def test_sgwu_waits_on_heterogeneous_cluster(self):
+        assert run("sgwu", "udpa").sync_wait > 0.0
+
+    def test_idpa_reduces_sgwu_wait(self):
+        """Fig. 14: IDPA (balanced form) cuts the synchronisation wait."""
+        w_udpa = run("sgwu", "udpa").sync_wait
+        w_idpa = run("sgwu", "idpa", idpa_mode="balanced").sync_wait
+        assert w_idpa < w_udpa
+
+
+class TestCommunication:
+    def test_eq11_both_strategies_equal(self):
+        """AGWU and SGWU produce the same comm volume (Eq. 11)."""
+        a = run("agwu", "idpa")
+        s = run("sgwu", "idpa")
+        assert a.comm_bytes == s.comm_bytes == a.expected_comm_bytes
+
+    def test_comm_scales_linearly_with_nodes(self):
+        """Fig. 15a: communication grows ~linearly in m (no data migration)."""
+        c5 = run("agwu", "idpa", m=5).comm_bytes / 5
+        c10 = run("agwu", "idpa", m=10).comm_bytes / 10
+        assert c5 == pytest.approx(c10)
+
+
+class TestWorkloadBalance:
+    def test_idpa_beats_udpa_balance(self):
+        """Fig. 15b (balanced IDPA form)."""
+        b_idpa = run("agwu", "idpa", idpa_mode="balanced").balance_degree
+        b_udpa = run("agwu", "udpa").balance_degree
+        assert b_idpa > b_udpa
+
+    def test_balance_in_unit_interval(self):
+        for strat in ("agwu", "sgwu"):
+            r = run(strat, "idpa")
+            assert 0 < r.balance_degree <= 1.0
+
+
+class TestMakespan:
+    def test_agwu_idpa_fastest(self):
+        """Fig. 14: AGWU+IDPA(balanced) <= SGWU+UDPA in virtual makespan."""
+        fast = run("agwu", "idpa", idpa_mode="balanced").makespan
+        slow = run("sgwu", "udpa").makespan
+        assert fast < slow
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(2, 10), seed=st.integers(0, 50))
+    def test_makespan_positive_and_allocation_complete(self, m, seed):
+        r = run("agwu", "idpa", m=m, seed=seed)
+        assert r.makespan > 0
+        assert r.allocation.sum() == (6000 // 4) * 4
+
+
+class TestRealTraining:
+    def test_weight_math_is_applied(self):
+        """worker_train results actually land in the global weights."""
+        import jax.numpy as jnp
+        w0 = {"w": jnp.zeros((4,), jnp.float32)}
+
+        def worker_train(j, w, idx, it):
+            return {"w": w["w"] + 1.0}, 0.9
+
+        t = np.ones(3)
+        sim = ClusterSim(300, t, iterations=2, batches=2, strategy="agwu",
+                         partitioning="idpa")
+        res = sim.run(init_weights=w0, worker_train=worker_train)
+        assert float(np.asarray(res.final_weights["w"]).sum()) > 0

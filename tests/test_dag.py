@@ -1,0 +1,98 @@
+"""Task DAG + priority list scheduling (Alg. 4.2) tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dag import (TaskDAG, cnn_training_dag, conv_layer_tasks,
+                            conv_output_shape, priority_schedule)
+
+
+class TestConvDecomposition:
+    def test_eq12_output_shape(self):
+        # (32 - 3 + 2*1)/1 + 1 = 32 (SAME-ish)
+        assert conv_output_shape(32, 32, 3, 3, 1, 1) == (32, 32)
+        assert conv_output_shape(28, 28, 5, 5, 1, 0) == (24, 24)
+
+    def test_eq13_task_count(self):
+        dag = TaskDAG()
+        tids = conv_layer_tasks(dag, 8, 8, 3, 3, pad=1, tile=1)
+        assert len(tids) == 8 * 8            # K_C = H_a * W_a
+
+    def test_tiling_reduces_tasks(self):
+        dag = TaskDAG()
+        tids = conv_layer_tasks(dag, 8, 8, 3, 3, pad=1, tile=4)
+        assert len(tids) == 4                # (8/4)^2
+
+
+class TestPriorities:
+    def test_upstream_higher_than_downstream(self):
+        dag = TaskDAG()
+        a = dag.add("a", 1.0)
+        b = dag.add("b", 1.0, deps=[a])
+        c = dag.add("c", 1.0, deps=[b])
+        dag.mark_priorities()
+        assert dag.tasks[a].priority > dag.tasks[b].priority > \
+            dag.tasks[c].priority
+
+    def test_same_level_same_priority(self):
+        dag = TaskDAG()
+        a = dag.add("a", 1.0)
+        b1 = dag.add("b1", 1.0, deps=[a])
+        b2 = dag.add("b2", 2.0, deps=[a])
+        dag.mark_priorities()
+        assert dag.tasks[b1].priority == dag.tasks[b2].priority
+
+    def test_cycle_detection(self):
+        dag = TaskDAG()
+        a = dag.add("a", 1.0, deps=[1])      # forward ref to b
+        b = dag.add("b", 1.0, deps=[a])
+        with pytest.raises(ValueError):
+            dag.mark_priorities()
+
+
+class TestSchedule:
+    def _dag(self):
+        return cnn_training_dag([
+            {"kind": "conv", "hx": 8, "wx": 8, "hf": 3, "wf": 3, "depth": 3},
+            {"kind": "pool", "hx": 8, "wx": 8, "k": 2},
+            {"kind": "fc", "in": 128, "out": 64},
+        ], tile=2)
+
+    def test_bounds(self):
+        dag = self._dag()
+        for k in (1, 2, 4, 8):
+            r = priority_schedule(dag, k)
+            assert r.makespan >= r.critical_path - 1e-9
+            assert r.makespan <= dag.total_work() + 1e-9
+            assert r.speedup <= k + 1e-9
+
+    def test_single_thread_is_serial(self):
+        dag = self._dag()
+        r = priority_schedule(dag, 1)
+        assert r.makespan == pytest.approx(dag.total_work())
+        assert r.speedup == pytest.approx(1.0)
+
+    def test_more_threads_not_slower(self):
+        dag = self._dag()
+        m1 = priority_schedule(dag, 2).makespan
+        m2 = priority_schedule(dag, 8).makespan
+        assert m2 <= m1 + 1e-9
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 99), threads=st.integers(1, 12),
+           n=st.integers(2, 40))
+    def test_random_dags_complete(self, seed, threads, n):
+        """Alg. 4.2 schedules every DAG completely and within bounds."""
+        rng = np.random.default_rng(seed)
+        dag = TaskDAG()
+        tids = []
+        for i in range(n):
+            k = rng.integers(0, min(i, 3) + 1)
+            deps = rng.choice(tids, size=k, replace=False) if tids and k else []
+            tids.append(dag.add(f"t{i}", float(rng.random() + 0.1),
+                                deps=list(deps)))
+        r = priority_schedule(dag, threads)
+        assert r.critical_path - 1e-9 <= r.makespan <= dag.total_work() + 1e-9
+        # work conservation: busy time sums to total work
+        assert r.thread_busy.sum() == pytest.approx(dag.total_work())

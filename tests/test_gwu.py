@@ -1,0 +1,101 @@
+"""SGWU (Eq. 7) / AGWU (Eq. 9-10) math tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.gwu import agwu_gamma, agwu_update, sgwu_merge
+from repro.core.param_server import ParameterServer
+
+
+def tree(val):
+    return {"a": jnp.full((3, 2), val, jnp.float32),
+            "b": {"c": jnp.full((4,), 2 * val, jnp.float32)}}
+
+
+class TestSGWU:
+    def test_eq7_weighted_average(self):
+        merged = sgwu_merge([tree(1.0), tree(3.0)], [0.25, 0.75])
+        np.testing.assert_allclose(merged["a"], 0.25 * 1 + 0.75 * 3, rtol=1e-6)
+        np.testing.assert_allclose(merged["b"]["c"], 2 * 2.5, rtol=1e-6)
+
+    def test_equal_weights_is_mean(self):
+        merged = sgwu_merge([tree(0.0), tree(10.0)], [0.5, 0.5])
+        np.testing.assert_allclose(merged["a"], 5.0, rtol=1e-6)
+
+    def test_zero_accuracy_degrades_to_uniform(self):
+        merged = sgwu_merge([tree(0.0), tree(4.0)], [0.0, 0.0])
+        np.testing.assert_allclose(merged["a"], 2.0, rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.floats(0.05, 1.0), min_size=2, max_size=6),
+           st.integers(0, 99))
+    def test_convexity(self, qs, seed):
+        """The merge is a convex combination: bounded by min/max leaf."""
+        rng = np.random.default_rng(seed)
+        vals = rng.standard_normal(len(qs))
+        merged = sgwu_merge([tree(float(v)) for v in vals], qs)
+        assert float(merged["a"].min()) >= vals.min() - 1e-5
+        assert float(merged["a"].max()) <= vals.max() + 1e-5
+
+
+class TestAGWU:
+    def test_eq10_update(self):
+        g = tree(1.0)
+        local = tree(2.0)
+        base = tree(1.0)          # worker trained from the current global
+        out = agwu_update(g, local, base, gamma=0.5, accuracy=0.8)
+        # W + 0.5*0.8*(2-1) = W + 0.4
+        np.testing.assert_allclose(out["a"], 1.4, rtol=1e-6)
+
+    def test_gamma_fresh_vs_stale(self):
+        """Fresh local weights (k close to i-1) get more mass (Eq. 9)."""
+        fresh = agwu_gamma(9, 10, outstanding_versions=[2])
+        stale = agwu_gamma(2, 10, outstanding_versions=[9])
+        assert fresh > stale
+        assert 0 < stale < fresh <= 1.0
+
+    def test_gamma_single_worker_is_one(self):
+        assert agwu_gamma(5, 6, outstanding_versions=[]) == pytest.approx(1.0)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 20), st.integers(1, 21),
+           st.lists(st.integers(0, 20), max_size=5))
+    def test_gamma_in_unit_interval(self, k, latest, outstanding):
+        g = agwu_gamma(min(k, latest), max(latest, 1), outstanding)
+        assert 0.0 < g <= 1.0
+
+
+class TestParameterServer:
+    def test_comm_accounting_eq11(self):
+        """C = 2 c_w m K: every round trip is 2 weight transfers."""
+        w0 = tree(0.0)
+        ps = ParameterServer(w0, num_workers=3)
+        K = 4
+        for it in range(K):
+            for j in range(3):
+                w, _ = ps.pull(j)
+                ps.push_agwu(j, tree(1.0), accuracy=0.5)
+        assert ps.comm_bytes == ps.expected_comm_bytes(K)
+
+    def test_versions_advance(self):
+        ps = ParameterServer(tree(0.0), num_workers=2)
+        ps.pull(0)
+        ps.pull(1)
+        ps.push_agwu(0, tree(1.0), 1.0)
+        assert ps.version == 1
+        ps.push_agwu(1, tree(1.0), 1.0)
+        assert ps.version == 2
+
+    def test_push_before_pull_raises(self):
+        ps = ParameterServer(tree(0.0), num_workers=1)
+        with pytest.raises(RuntimeError):
+            ps.push_agwu(0, tree(1.0), 1.0)
+
+    def test_sgwu_requires_all_workers(self):
+        ps = ParameterServer(tree(0.0), num_workers=2)
+        ps.pull(0)
+        with pytest.raises(RuntimeError):
+            ps.push_sgwu([(0, tree(1.0), 1.0)])

@@ -1,0 +1,98 @@
+"""IDPA (Alg. 3.1) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.idpa import (IDPAPartitioner, UDPAPartitioner,
+                             effective_iterations, workload_balance_degree)
+
+
+def drive(part, t):
+    part.first_batch()
+    while not part.done:
+        part.next_batch(t * np.maximum(part.totals, 1))
+    return part.totals
+
+
+class TestEffectiveIterations:
+    def test_eq6_formula(self):
+        # K' = K + A/2 - 1 (paper Eq. 6, floored)
+        assert effective_iterations(100, 10) == 104
+        assert effective_iterations(10, 2) == 10    # 2 + (10 - 1) = 10 (floor)
+
+    def test_bounds(self):
+        with pytest.raises(ValueError):
+            effective_iterations(10, 0)
+        with pytest.raises(ValueError):
+            effective_iterations(10, 11)
+
+
+class TestIDPA:
+    def test_first_batch_eq2(self):
+        p = IDPAPartitioner(1000, 4, 2, frequencies=[1, 1, 1, 1])
+        a = p.first_batch()
+        assert a.sum() == 500 and np.all(a == 125)
+
+    def test_first_batch_proportional(self):
+        p = IDPAPartitioner(1000, 2, 2, frequencies=[1, 3])
+        a = p.first_batch()
+        assert a[0] == 125 and a[1] == 375           # floor + remainder
+
+    def test_faster_nodes_get_more(self):
+        t = np.array([2.0, 1.0, 0.5, 0.25])
+        p = IDPAPartitioner(8000, 4, 4, frequencies=1 / t, mode="balanced")
+        totals = drive(p, t)
+        assert np.all(np.diff(totals) > 0)           # monotone in speed
+        busy = t * totals
+        assert workload_balance_degree(busy) > 0.95
+
+    def test_balanced_beats_paper_mode_balance(self):
+        t = np.array([2.0, 1.0, 0.5, 0.25, 0.125])
+        res = {}
+        for mode in ("paper", "balanced"):
+            p = IDPAPartitioner(20000, 5, 5, frequencies=1 / t, mode=mode)
+            totals = drive(p, t)
+            res[mode] = workload_balance_degree(t * totals)
+        assert res["balanced"] >= res["paper"]
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        m=st.integers(2, 8),
+        a=st.integers(1, 6),
+        n_per=st.integers(50, 500),
+        seed=st.integers(0, 100),
+        mode=st.sampled_from(["paper", "balanced"]),
+    )
+    def test_invariants(self, m, a, n_per, seed, mode):
+        """Every batch sums to floor(N/A); increments non-negative;
+        totals == batch_size * A after driving."""
+        rng = np.random.default_rng(seed)
+        t = 0.25 + rng.random(m)
+        N = n_per * m
+        p = IDPAPartitioner(N, m, a, frequencies=1 / t, mode=mode)
+        drive(p, t)
+        b = N // a
+        for alloc in p.history:
+            assert alloc.sum() == b
+            assert np.all(alloc >= 0)
+        assert p.totals.sum() == b * a
+
+
+class TestUDPA:
+    def test_uniform(self):
+        p = UDPAPartitioner(1200, 4, 3)
+        p.allocate_all()
+        assert np.all(p.totals == 300)
+
+
+class TestBalanceDegree:
+    def test_degenerate(self):
+        assert workload_balance_degree([]) == 1.0
+        assert workload_balance_degree([0, 0]) == 1.0
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(0.1, 100), min_size=1, max_size=20))
+    def test_range(self, loads):
+        b = workload_balance_degree(loads)
+        assert 0.0 < b <= 1.0

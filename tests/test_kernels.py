@@ -1,0 +1,137 @@
+"""Per-kernel allclose sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+class TestConv2d:
+    @pytest.mark.parametrize("B,H,W,Cin,Cout,k", [
+        (1, 8, 8, 1, 4, 3),
+        (2, 16, 16, 3, 8, 3),
+        (2, 12, 12, 4, 16, 5),
+        (1, 7, 9, 2, 4, 3),          # odd spatial
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, H, W, Cin, Cout, k, dtype):
+        key = jax.random.PRNGKey(hash((B, H, W, Cin, Cout, k)) % 2**31)
+        k1, k2 = jax.random.split(key)
+        x = rand(k1, (B, H, W, Cin), dtype)
+        w = rand(k2, (k, k, Cin, Cout), dtype)
+        got = conv2d_pallas(x, w)
+        want = ref.conv2d_ref(x, w)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32),
+            atol=TOL[dtype] * k * k * Cin, rtol=1e-2)
+
+    def test_oc_tiling(self):
+        key = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+        x = rand(k1, (1, 8, 8, 3), jnp.float32)
+        w = rand(k2, (3, 3, 3, 8), jnp.float32)
+        a = conv2d_pallas(x, w, oc_tile=4)
+        b = conv2d_pallas(x, w, oc_tile=8)
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,H,KH,D", [
+        (1, 64, 4, 4, 16),           # MHA
+        (2, 100, 8, 2, 32),          # GQA, ragged seq
+        (1, 128, 4, 1, 64),          # MQA
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, S, H, KH, D, causal, dtype):
+        key = jax.random.PRNGKey(hash((B, S, H, KH, D, causal)) % 2**31)
+        ks = jax.random.split(key, 3)
+        q = rand(ks[0], (B, H, S, D), dtype)
+        k = rand(ks[1], (B, KH, S, D), dtype)
+        v = rand(ks[2], (B, KH, S, D), dtype)
+        got = flash_attention_pallas(q, k, v, causal=causal,
+                                     q_tile=32, k_tile=32)
+        want = ref.attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(got.astype(jnp.float32),
+                                   want.astype(jnp.float32),
+                                   atol=TOL[dtype] * 4, rtol=2e-2)
+
+    @pytest.mark.parametrize("window,softcap", [(16, 0.0), (0, 30.0),
+                                                (8, 50.0)])
+    def test_window_and_softcap(self, window, softcap):
+        key = jax.random.PRNGKey(7)
+        ks = jax.random.split(key, 3)
+        q = rand(ks[0], (1, 4, 96, 32), jnp.float32)
+        k = rand(ks[1], (1, 2, 96, 32), jnp.float32)
+        v = rand(ks[2], (1, 2, 96, 32), jnp.float32)
+        got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                     softcap=softcap, q_tile=32, k_tile=32)
+        want = ref.attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=window or None,
+            softcap=softcap).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-3)
+
+    def test_ops_wrapper_layouts(self):
+        """ops.flash_attention takes BSHD like the models."""
+        key = jax.random.PRNGKey(3)
+        ks = jax.random.split(key, 3)
+        q = rand(ks[0], (2, 64, 4, 16), jnp.float32)
+        k = rand(ks[1], (2, 64, 2, 16), jnp.float32)
+        v = rand(ks[2], (2, 64, 2, 16), jnp.float32)
+        got = ops.flash_attention(q, k, v, impl="pallas")
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-3)
+
+
+class TestRMSNorm:
+    @settings(max_examples=20, deadline=None)
+    @given(rows=st.integers(1, 300), d=st.sampled_from([8, 64, 128, 512]),
+           seed=st.integers(0, 99))
+    def test_matches_ref_hypothesis(self, rows, d, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        x = jax.random.normal(k1, (rows, d))
+        s = jax.random.normal(k2, (d,)) * 0.1 + 1.0
+        got = rmsnorm_pallas(x, s, row_tile=64)
+        want = ref.rmsnorm_ref(x, s)
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+    @pytest.mark.parametrize("shape", [(5, 7, 64), (2, 3, 4, 32), (128,)])
+    def test_nd_shapes(self, shape):
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, shape)
+        s = jnp.ones((shape[-1],))
+        got = rmsnorm_pallas(x, s)
+        want = ref.rmsnorm_ref(x, s)
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+class TestOpsSelection:
+    def test_default_on_cpu_is_ref(self):
+        assert ops.default_impl() in ("ref", "pallas")
+
+    def test_conv_grad_via_ref(self):
+        """The ref conv path is differentiable (used by CNN training)."""
+        key = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+        x = jax.random.normal(k1, (1, 8, 8, 2))
+        w = jax.random.normal(k2, (3, 3, 2, 4))
+        g = jax.grad(lambda w_: ops.conv2d(x, w_, impl="ref").sum())(w)
+        assert g.shape == w.shape and float(jnp.abs(g).sum()) > 0

@@ -1,0 +1,151 @@
+"""Optimizers, data pipeline, checkpointing, CNN."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpointing import checkpoint
+from repro.data.pipeline import IDPADataset, host_batch, pack_sequences
+from repro.data.synthetic import image_dataset, lm_corpus
+from repro.models.cnn import (CNNConfig, cnn_accuracy, cnn_forward, cnn_loss,
+                              init_cnn, make_case)
+from repro.optim.optimizers import (adamw, apply_updates,
+                                    clip_by_global_norm, global_norm,
+                                    make_optimizer, momentum, sgd,
+                                    warmup_cosine)
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name", ["sgd", "momentum", "adamw"])
+    def test_converges_on_quadratic(self, name):
+        opt = make_optimizer(name)
+        params = {"w": jnp.array([5.0, -3.0])}
+        st_ = opt.init(params)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        for i in range(200):
+            g = jax.grad(loss)(params)
+            upd, st_ = opt.update(g, st_, params, 0.05)
+            params = apply_updates(params, upd)
+        assert float(loss(params)) < 1e-2
+
+    def test_clip(self):
+        g = {"a": jnp.ones((100,)) * 10}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+        assert float(norm) == pytest.approx(100.0, rel=1e-4)
+
+    def test_schedule(self):
+        s = warmup_cosine(1.0, 10, 100)
+        assert float(s(0)) == 0.0
+        assert float(s(10)) == pytest.approx(1.0)
+        assert float(s(100)) == pytest.approx(0.1, rel=1e-3)
+        assert float(s(5)) == pytest.approx(0.5)
+
+
+class TestData:
+    def test_pack_sequences(self):
+        corpus = np.arange(101, dtype=np.int32)
+        rows = pack_sequences(corpus, 10)
+        assert rows.shape == (10, 11)
+        b = host_batch(rows[:2])
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+    def test_corpus_learnable(self):
+        c = lm_corpus(5000, 256, seed=0)
+        assert c.min() >= 0 and c.max() < 256
+        # Markov structure: conditional entropy < marginal entropy
+        from collections import Counter
+        pairs = Counter(zip(c[:-1], c[1:]))
+        marg = Counter(c)
+        n = len(c) - 1
+        h_joint = -sum(v / n * np.log(v / n) for v in pairs.values())
+        h_marg = -sum(v / len(c) * np.log(v / len(c)) for v in marg.values())
+        assert h_joint - h_marg < h_marg  # H(X2|X1) < H(X)
+
+    def test_idpa_dataset_views(self):
+        xs = np.arange(1000)
+        ds = IDPADataset({"x": xs}, num_nodes=4, batches=2,
+                         frequencies=[1, 1, 2, 2])
+        views = ds.node_views()
+        assert len(views) == 4
+        total = ds.totals.sum()
+        assert total == 500                      # first batch released
+        ds.report_durations([1.0, 1.0, 0.5, 0.5])
+        assert ds.totals.sum() == 1000
+        rng = np.random.default_rng(0)
+        b = ds.node_batch(2, 16, rng)
+        assert b["x"].shape == (16,)
+
+    def test_image_dataset_signal(self):
+        xs, ys = image_dataset(200, size=16)
+        assert xs.shape == (200, 16, 16, 3)
+        # class signal: same-class images correlate more than cross-class
+        c0 = xs[ys == 0]
+        c1 = xs[ys == 1]
+        if len(c0) > 2 and len(c1) > 2:
+            within = np.mean([np.corrcoef(c0[0].ravel(), c0[i].ravel())[0, 1]
+                              for i in range(1, min(4, len(c0)))])
+            across = np.mean([np.corrcoef(c0[0].ravel(), c1[i].ravel())[0, 1]
+                              for i in range(min(3, len(c1)))])
+            assert within > across
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                          "b": jnp.ones((3,))},
+                "scale": jnp.float32(2.5)}
+        p = checkpoint.save(str(tmp_path), tree, step=7)
+        assert os.path.exists(p)
+        restored, step = checkpoint.restore(str(tmp_path), tree)
+        assert step == 7
+        np.testing.assert_array_equal(restored["layer"]["w"],
+                                      tree["layer"]["w"])
+
+    def test_latest_step(self, tmp_path):
+        tree = {"w": jnp.zeros(2)}
+        checkpoint.save(str(tmp_path), tree, step=1)
+        checkpoint.save(str(tmp_path), tree, step=5)
+        assert checkpoint.latest_step(str(tmp_path)) == 5
+
+    def test_missing_key_raises(self, tmp_path):
+        checkpoint.save(str(tmp_path), {"w": jnp.zeros(2)}, step=0)
+        with pytest.raises(KeyError):
+            checkpoint.restore(str(tmp_path), {"w": jnp.zeros(2),
+                                               "extra": jnp.zeros(1)})
+
+
+class TestCNN:
+    def test_table2_cases(self):
+        for case in ("case1", "case4", "case7"):
+            cfg = make_case(case, image_size=32)
+            params = init_cnn(jax.random.PRNGKey(0), cfg)
+            assert len(params["conv"]) == cfg.conv_layers
+            assert len(params["fc"]) == cfg.fc_layers
+            x = jnp.zeros((2, 32, 32, 3))
+            out = cnn_forward(params, x, cfg)
+            assert out.shape == (2, cfg.num_classes)
+
+    def test_one_step_improves_loss(self):
+        cfg = CNNConfig(name="t", image_size=16, conv_layers=2, filters=4,
+                        fc_layers=2, fc_neurons=32)
+        xs, ys = image_dataset(64, size=16)
+        batch = {"images": jnp.asarray(xs), "labels": jnp.asarray(ys)}
+        params = init_cnn(jax.random.PRNGKey(0), cfg)
+        loss0, g = jax.value_and_grad(lambda p: cnn_loss(p, batch, cfg))(params)
+        params2 = jax.tree_util.tree_map(lambda p, gg: p - 0.5 * gg, params, g)
+        loss1 = cnn_loss(params2, batch, cfg)
+        assert float(loss1) < float(loss0)
+
+    def test_accuracy_metric(self):
+        cfg = CNNConfig(name="t", image_size=16, conv_layers=1, filters=4,
+                        fc_layers=1, fc_neurons=16)
+        params = init_cnn(jax.random.PRNGKey(0), cfg)
+        xs, ys = image_dataset(32, size=16)
+        acc = cnn_accuracy(params, {"images": jnp.asarray(xs),
+                                    "labels": jnp.asarray(ys)}, cfg)
+        assert 0.0 <= float(acc) <= 1.0
