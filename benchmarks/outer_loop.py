@@ -1,0 +1,93 @@
+"""Outer-layer micro-benchmark: fused vmapped SGWU round vs the legacy
+sequential per-node loop.
+
+The sequential emulation dispatches m × local_steps jitted steps from the
+host (plus a device sync per node), so its SGWU round cost grows linearly
+in m from dispatch alone — the synchronization overhead BPT-CNN's outer
+layer is meant to remove.  The fused path runs the whole nodes ×
+local_steps grid as ONE vmap+scan dispatch against node-stacked pytrees.
+
+Run:  python -m benchmarks.outer_loop [--report-only]
+Emits ``name,us_per_call,derived`` CSV rows (house format) and a speedup
+summary; exits non-zero if the fused round is not at least 2x faster at
+m = 8 (the PR's acceptance gate).  ``--report-only`` skips the exit-code
+gate — for shared CI runners whose wall-clock noise shouldn't redden a
+scheduled job.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.bpt_trainer import BPTTrainer
+from repro.core.types import TrainConfig
+from repro.data.pipeline import IDPADataset
+from repro.data.synthetic import image_dataset
+from repro.models.cnn import CNNConfig, cnn_loss, init_cnn
+
+NODE_COUNTS = (4, 8, 16)
+LOCAL_STEPS = 2
+ROUNDS = 6
+BATCH = 32
+
+
+def _make_trainer(m: int, fused: bool, xs, ys, params, cfg) -> BPTTrainer:
+    ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=m, batches=1)
+    tc = TrainConfig(outer_strategy="sgwu", outer_nodes=m,
+                     optimizer="adamw", learning_rate=2e-3,
+                     total_steps=1000, warmup_steps=10,
+                     local_steps=LOCAL_STEPS, seed=0, fused_outer=fused)
+    return BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds, tc,
+                      batch_size=BATCH)
+
+
+def _time_rounds(trainer: BPTTrainer, rounds: int, repeats: int = 2) -> float:
+    """Best-of-``repeats`` per-round time (min rejects scheduler noise)."""
+    trainer.train(rounds=1)                    # warmup: compile both paths
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        trainer.train(rounds=rounds)
+        best = min(best, (time.perf_counter() - t0) / rounds)
+    return best
+
+
+def run_all() -> bool:
+    cfg = CNNConfig(name="outer-bench", image_size=8, conv_layers=1,
+                    filters=4, fc_layers=1, fc_neurons=32)
+    xs, ys = image_dataset(2048, size=8, seed=0)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+
+    ok = True
+    for m in NODE_COUNTS:
+        seq = _time_rounds(_make_trainer(m, False, xs, ys, params, cfg),
+                           ROUNDS)
+        fused = _time_rounds(_make_trainer(m, True, xs, ys, params, cfg),
+                             ROUNDS)
+        speedup = seq / fused
+        emit(f"sgwu_round_sequential_m{m}", seq * 1e6, "")
+        emit(f"sgwu_round_fused_m{m}", fused * 1e6, f"speedup={speedup:.2f}x")
+        if m == 8 and speedup < 2.0:
+            ok = False
+    return ok
+
+
+def main() -> None:
+    report_only = "--report-only" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    ok = run_all()
+    if not ok:
+        print("FAIL: fused SGWU round < 2x faster than sequential at m=8",
+              file=sys.stderr)
+        if not report_only:
+            sys.exit(1)
+    else:
+        print("OK: fused SGWU round >= 2x faster than sequential at m=8")
+
+
+if __name__ == "__main__":
+    main()

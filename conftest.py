@@ -1,0 +1,14 @@
+"""Root conftest: make ``repro`` importable straight from the checkout.
+
+``pip install -e .`` is the supported path (see README.md); prepending
+``src/`` unconditionally keeps ``python -m pytest`` testing THIS working
+tree even when some other ``repro`` install exists (an editable install
+resolves to the same tree, so this is harmless there), and kills the
+historical ``PYTHONPATH=src`` hack.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

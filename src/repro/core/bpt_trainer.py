@@ -8,6 +8,15 @@ is emulated with per-node speed factors scaling measured step times into
 virtual completion times — the event order (and therefore the staleness
 pattern AGWU sees) is exactly the paper's.
 
+With ``TrainConfig.fused_outer`` (the default) the SGWU outer layer is a
+single jitted dispatch per round: the m nodes' parameters and optimizer
+states live as node-stacked pytrees (leading axis m) and the whole
+nodes × local_steps grid runs as ``jax.vmap`` over a ``lax.scan`` — host
+dispatch cost is O(1) in m instead of O(m · h), which is precisely the
+outer-layer synchronization cost the paper attacks.  AGWU keeps its
+event-ordered heap (the ordering IS the algorithm) but pushes through a
+pre-jitted, buffer-donating Eq. (10) path.
+
 Inner layer: the jitted step itself — XLA/Pallas task parallelism
 (DESIGN.md §3) — plus optional activation remat.
 """
@@ -26,6 +35,7 @@ from repro.data.pipeline import IDPADataset
 from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
                                     make_optimizer, warmup_cosine)
 
+from .gwu import broadcast_tree
 from .param_server import ParameterServer
 from .types import TrainConfig
 
@@ -90,11 +100,11 @@ class BPTTrainer:
         self.rng = np.random.default_rng(train_cfg.seed)
         self.accuracy_weighting = accuracy_weighting
         self._q_ema = None
+        self._eval_vmapped = None    # lazily-built vmap of eval_fn (fused)
 
         grad_clip = train_cfg.grad_clip
 
-        @jax.jit
-        def train_step(params, opt_state, batch, step):
+        def step_body(params, opt_state, batch, step):
             (loss, aux), grads = jax.value_and_grad(
                 self.loss_fn, has_aux=True)(params, batch)
             if grad_clip:
@@ -104,7 +114,32 @@ class BPTTrainer:
             params = apply_updates(params, updates)
             return params, opt_state, loss
 
-        self._train_step = train_step
+        def node_round(params, opt_state, batches, step):
+            """One node's local iteration as a lax.scan over local_steps.
+
+            ``batches`` leaves are (local_steps, B, ...); ``step`` is the
+            round index, held constant across the scan exactly like the
+            sequential loop held it constant across its local steps.
+            """
+            def body(carry, batch):
+                params, opt_state = carry
+                params, opt_state, loss = step_body(
+                    params, opt_state, batch, step)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                body, (params, opt_state), batches)
+            return params, opt_state, losses[-1]
+
+        self._train_step = jax.jit(step_body)
+        # single-node round: ONE dispatch per local round (sync baseline)
+        self._scan_round = jax.jit(node_round)
+        # fused outer layer: nodes × local_steps in ONE dispatch.  The
+        # node-stacked params/opt-state buffers are donated — each round
+        # consumes the previous round's stack instead of copying it m×.
+        self._fused_round = jax.jit(
+            jax.vmap(node_round, in_axes=(0, 0, 0, None)),
+            donate_argnums=(0, 1))
 
     def _q_effective(self, q: float) -> float:
         """Relative contribution weight Q (see accuracy_weighting above)."""
@@ -132,6 +167,35 @@ class BPTTrainer:
     def _eval(self, params):
         return float(self.eval_fn(params)) if self.eval_fn else 0.0
 
+    @staticmethod
+    def _node_slice(stacked, node: int):
+        """Node ``j``'s view of a node-stacked pytree."""
+        return jax.tree_util.tree_map(lambda x: x[node], stacked)
+
+    def _eval_nodes(self, stacked) -> list:
+        """Per-node accuracies for a node-stacked pytree.
+
+        One vmapped dispatch when ``eval_fn`` is traceable (keeping the
+        fused round's O(1)-in-m dispatch property); an eval_fn that fails
+        its FIRST vmapped trace/execution (host-side numpy code, python
+        control flow) downgrades permanently to the per-node slice loop.
+        Failures after a successful first call propagate — they signal a
+        real runtime problem, not untraceability.
+        """
+        if self._eval_vmapped is None:       # first use: probe traceability
+            try:
+                fn = jax.jit(jax.vmap(self.eval_fn))
+                qs = np.asarray(fn(stacked))
+                self._eval_vmapped = fn
+                return [max(float(q), 1e-3) for q in qs]
+            except Exception:
+                self._eval_vmapped = False
+        if self._eval_vmapped is not False:
+            qs = np.asarray(self._eval_vmapped(stacked))
+            return [max(float(q), 1e-3) for q in qs]
+        return [max(self._eval(self._node_slice(stacked, j)), 1e-3)
+                for j in range(self.m)]
+
     # ------------------------------------------------------------------
     def train(self, rounds: int) -> TrainReport:
         if self.tc.outer_strategy == "sgwu":
@@ -142,16 +206,22 @@ class BPTTrainer:
 
     # -------------------------- plain sync DP --------------------------
     def _train_sync(self, rounds: int) -> TrainReport:
-        """Baseline: synchronous data parallelism (one fused step/round)."""
+        """Baseline: synchronous data parallelism (one fused scan/round)."""
         params = self.params0
         opt_state = self.opt.init(params)
         losses, accs = [], []
         clock = 0.0
         for r in range(rounds):
-            params, opt_state, loss, wall = self._local_round(
-                params, opt_state, 0, r)
-            clock += wall
-            losses.append(loss)
+            t0 = time.perf_counter()
+            batches = [self.dataset.node_batch(0, self.batch_size, self.rng)
+                       for _ in range(self.tc.local_steps)]
+            stacked = {k: jnp.stack([b[k] for b in batches])
+                       for k in batches[0]}
+            params, opt_state, loss = self._scan_round(
+                params, opt_state, stacked, jnp.asarray(r, jnp.int32))
+            jax.block_until_ready(loss)
+            clock += (time.perf_counter() - t0) * self.speed[0]
+            losses.append(float(loss))
             if self.eval_fn and (r + 1) % 5 == 0:
                 accs.append((clock, self._eval(params)))
         return TrainReport("sync", rounds, losses, accs, clock, 0.0, 0,
@@ -159,12 +229,62 @@ class BPTTrainer:
 
     # ------------------------------ SGWU -------------------------------
     def _train_sgwu(self, rounds: int) -> TrainReport:
+        if self.tc.fused_outer:
+            return self._train_sgwu_fused(rounds)
+        return self._train_sgwu_sequential(rounds)
+
+    def _train_sgwu_fused(self, rounds: int) -> TrainReport:
+        """Fused outer layer: the m nodes' round is ONE jitted dispatch.
+
+        Node-stacked params/opt-states flow ``pull_all_stacked`` →
+        ``_fused_round`` (vmap over nodes, scan over local steps, stacked
+        buffers donated) → ``push_sgwu_stacked`` (jitted Eq. 7 merge on the
+        stack, donated).  Per-node virtual durations are an equal share of
+        the measured round wall scaled by the node speed factors — the
+        heterogeneity emulation the sequential loop derived from per-node
+        measurement.
+        """
+        server = ParameterServer(self.params0, self.m)
+        stacked_opt = broadcast_tree(self.opt.init(self.params0), self.m)
+        losses, accs = [], []
+        clock, sync_wait = 0.0, 0.0
+        for r in range(rounds):
+            stacked_w, _ = server.pull_all_stacked()
+            t0 = time.perf_counter()
+            batches = self.dataset.stacked_round_batches(
+                self.batch_size, self.tc.local_steps, self.rng)
+            stacked_w, stacked_opt, node_losses = self._fused_round(
+                stacked_w, stacked_opt, batches, jnp.asarray(r, jnp.int32))
+            node_losses = np.asarray(jax.block_until_ready(node_losses))
+            wall = time.perf_counter() - t0
+            durs = (wall / self.m) * self.speed
+            clock += durs.max()
+            sync_wait += float((durs.max() - durs).sum())      # Eq. (8)
+            if self.eval_fn:
+                qs = self._eval_nodes(stacked_w)
+            else:
+                qs = [1.0] * self.m          # SGWU normalises in Eq. 7
+            server.push_sgwu_stacked(stacked_w, qs, virtual_time=clock)
+            losses.append(float(node_losses.mean()))
+            self.dataset.report_durations(durs)
+            if self.eval_fn:
+                accs.append((clock, self._eval(server.global_weights)))
+        return TrainReport("sgwu", rounds, losses, accs, clock, sync_wait,
+                           server.comm_bytes, self.dataset.totals,
+                           server.global_weights)
+
+    def _train_sgwu_sequential(self, rounds: int) -> TrainReport:
+        """Legacy emulation: one jitted step per node per local step.
+
+        Kept as the reference the fused path is regression-tested against
+        (and the baseline ``benchmarks/outer_loop.py`` measures)."""
         server = ParameterServer(self.params0, self.m)
         opt_states = [self.opt.init(self.params0) for _ in range(self.m)]
         losses, accs = [], []
         clock, sync_wait = 0.0, 0.0
         for r in range(rounds):
             subs, durs = [], np.zeros(self.m)
+            node_losses = np.zeros(self.m)
             for j in range(self.m):
                 w, _ = server.pull(j)
                 w2, opt_states[j], loss, dur = self._local_round(
@@ -172,10 +292,11 @@ class BPTTrainer:
                 q = self._eval(w2) if self.eval_fn else 1.0
                 subs.append((j, w2, max(q, 1e-3)))  # SGWU normalises in Eq. 7
                 durs[j] = dur
+                node_losses[j] = loss
             clock += durs.max()
             sync_wait += float((durs.max() - durs).sum())      # Eq. (8)
             server.push_sgwu(subs, virtual_time=clock)
-            losses.append(float(np.mean([0.0])) if not subs else loss)
+            losses.append(float(node_losses.mean()))
             self.dataset.report_durations(durs)
             if self.eval_fn:
                 accs.append((clock, self._eval(server.global_weights)))
@@ -186,6 +307,7 @@ class BPTTrainer:
     # ------------------------------ AGWU -------------------------------
     def _train_agwu(self, rounds: int) -> TrainReport:
         server = ParameterServer(self.params0, self.m)
+        server.warmup_agwu()     # compile the donated Eq. 10 push up front
         opt_states = [self.opt.init(self.params0) for _ in range(self.m)]
         losses, accs = [], []
         heap: list[tuple[float, int, int]] = []     # (vtime, node, round)
@@ -205,7 +327,8 @@ class BPTTrainer:
             node_durs[j] = dur
             clock = vt + dur
             q = self._eval(w2) if self.eval_fn else 1.0
-            server.push_agwu(j, w2, self._q_effective(q), virtual_time=clock)
+            server.push_agwu(j, w2, self._q_effective(q), virtual_time=clock,
+                             donate=True)     # w2 is dead after the push
             losses.append(loss)
             rounds_done[j] += 1
             if int(rounds_done.min()) >= self.dataset.part.current_batch:

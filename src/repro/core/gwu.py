@@ -7,12 +7,15 @@ the versioning/bookkeeping lives in ``param_server.ParameterServer``.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sgwu_merge", "agwu_gamma", "agwu_update", "tree_sub", "tree_add_scaled"]
+__all__ = ["sgwu_merge", "sgwu_merge_stacked", "sgwu_merge_and_rebroadcast",
+           "broadcast_tree", "agwu_gamma", "agwu_update", "tree_sub",
+           "tree_add_scaled"]
 
 
 def tree_sub(a, b):
@@ -25,13 +28,68 @@ def tree_add_scaled(base, delta, scale):
     return jax.tree_util.tree_map(lambda x, d: x + scale * d, base, delta)
 
 
-@functools.partial(jax.jit, static_argnames=())
+@jax.jit
 def _weighted_sum(stacked, weights):
     """sum_j stacked[j] * weights[j] over leading axis, leafwise."""
     def per_leaf(leaf):
         w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
         return jnp.sum(leaf * w, axis=0)
     return jax.tree_util.tree_map(per_leaf, stacked)
+
+
+# The node-stacked round result is consumed by the merge, and the merged
+# weights are immediately re-broadcast for the next round's stack — fusing
+# the two lets XLA alias the donated input stack with the output stack
+# (identical shapes), so the m× parameter payload is reused, not copied.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _merge_and_rebroadcast(stacked, weights):
+    merged = _weighted_sum(stacked, weights)
+    new_stacked = jax.tree_util.tree_map(
+        lambda m, s: jnp.broadcast_to(m[None], s.shape), merged, stacked)
+    return merged, new_stacked
+
+
+def _merge_weights(accuracies, num_nodes: int):
+    """Eq. (7) weighting Q_j / sum_k Q_k, with the all-zero guard."""
+    q = jnp.asarray(accuracies, dtype=jnp.float32)
+    total = jnp.sum(q)
+    # guard: all-zero accuracies degrade to the uniform average
+    return jnp.where(total > 0, q / jnp.maximum(total, 1e-12),
+                     jnp.full_like(q, 1.0 / num_nodes))
+
+
+def _validate_stack(stacked, accuracies) -> int:
+    """Shared prologue of the stacked Eq. (7) entry points; returns m."""
+    num_nodes = len(accuracies)
+    if num_nodes == 0:
+        raise ValueError("need at least one local weight set")
+    leaves = jax.tree_util.tree_leaves(stacked)
+    if leaves and leaves[0].shape[0] != num_nodes:
+        raise ValueError(
+            f"stacked leading axis {leaves[0].shape[0]} != "
+            f"{num_nodes} accuracies")
+    return num_nodes
+
+
+def sgwu_merge_stacked(stacked, accuracies):
+    """Eq. (7) against the node-stacked representation.
+
+    ``stacked`` is one pytree whose leaves carry a leading node axis of
+    size m (worker j's weights at index j).
+    """
+    num_nodes = _validate_stack(stacked, accuracies)
+    return _weighted_sum(stacked, _merge_weights(accuracies, num_nodes))
+
+
+def sgwu_merge_and_rebroadcast(stacked, accuracies):
+    """Eq. (7) merge plus the next round's replica stack, in one jit.
+
+    Returns ``(merged, new_stacked)``.  ``stacked`` is DONATED — its
+    buffers become ``new_stacked`` — so callers must not reuse it.
+    """
+    num_nodes = _validate_stack(stacked, accuracies)
+    return _merge_and_rebroadcast(stacked,
+                                  _merge_weights(accuracies, num_nodes))
 
 
 def sgwu_merge(local_weights: Sequence, accuracies: Sequence[float]):
@@ -43,14 +101,16 @@ def sgwu_merge(local_weights: Sequence, accuracies: Sequence[float]):
         raise ValueError("need at least one local weight set")
     if len(local_weights) != len(accuracies):
         raise ValueError("one accuracy per local weight set")
-    q = jnp.asarray(accuracies, dtype=jnp.float32)
-    total = jnp.sum(q)
-    # guard: all-zero accuracies degrade to the uniform average
-    w = jnp.where(total > 0, q / jnp.maximum(total, 1e-12),
-                  jnp.full_like(q, 1.0 / len(accuracies)))
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0),
                                      *local_weights)
-    return _weighted_sum(stacked, w)
+    return sgwu_merge_stacked(stacked, accuracies)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes",))
+def broadcast_tree(tree, num_nodes: int):
+    """Replicate a pytree along a new leading node axis of size m."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (num_nodes,) + x.shape), tree)
 
 
 def agwu_gamma(base_version: int, latest_version: int,
@@ -66,25 +126,48 @@ def agwu_gamma(base_version: int, latest_version: int,
     W_{j'}^{k'}, j' != j).  The submitter's own term is included so the
     factor is a proper share in [0, 1] even when it is the only one in
     flight (denominator then equals the numerator => gamma = 1).
+
+    Pure Python/``math`` on purpose: this runs on the host once per AGWU
+    push, and the previous ``jnp.exp`` version paid a device round-trip
+    (plus f32 rounding) per push inside the event loop.
     """
     denom_versions = list(outstanding_versions) + [base_version]
     i_minus_1 = max(latest_version, 1)
-    num = float(jnp.exp(base_version / i_minus_1))
-    den = float(sum(jnp.exp(v / i_minus_1) for v in denom_versions))
+    num = math.exp(base_version / i_minus_1)
+    den = sum(math.exp(v / i_minus_1) for v in denom_versions)
     return num / den
 
 
-@jax.jit
-def _agwu_apply(global_w, local_w, base_w, scale):
+def _agwu_apply_impl(global_w, local_w, base_w, scale):
     return jax.tree_util.tree_map(
         lambda g, l, b: g + scale * (l - b), global_w, local_w, base_w)
 
 
+_agwu_apply = jax.jit(_agwu_apply_impl)
+# Donated variant for the ParameterServer push path: the submitted local
+# weights are consumed by the push (the worker immediately re-pulls), so
+# their buffers are reused for the new global weights.  global/base are NOT
+# donated — right after a pull they alias each other.
+_agwu_apply_donated = jax.jit(_agwu_apply_impl, donate_argnums=(1,))
+
+
 def agwu_update(global_weights, local_weights, base_weights,
-                gamma: float, accuracy: float):
+                gamma: float, accuracy: float, *, donate_local: bool = False):
     """Eq. (10): W(i) = W(i-1) + gamma * Q * (W_j(k) - W(k)).
 
-    ``base_weights`` is the snapshot W(k) the worker trained from.
+    ``base_weights`` is the snapshot W(k) the worker trained from.  With
+    ``donate_local=True`` the caller hands over ``local_weights``' buffers
+    (the ParameterServer push path does).
     """
     scale = jnp.asarray(gamma * accuracy, dtype=jnp.float32)
-    return _agwu_apply(global_weights, local_weights, base_weights, scale)
+    if donate_local:
+        # Donation needs device-committed jax.Arrays (numpy trees from the
+        # simulators can't donate and would warn), and XLA rejects donating
+        # a buffer that another argument aliases (a worker pushing back an
+        # untouched pull) — identity-check the leaves.
+        leaves = set(map(id, jax.tree_util.tree_leaves(global_weights)))
+        leaves |= set(map(id, jax.tree_util.tree_leaves(base_weights)))
+        donate_local = all(isinstance(x, jax.Array) and id(x) not in leaves
+                           for x in jax.tree_util.tree_leaves(local_weights))
+    apply = _agwu_apply_donated if donate_local else _agwu_apply
+    return apply(global_weights, local_weights, base_weights, scale)

@@ -33,8 +33,8 @@ def effective_iterations(K: int, A: int) -> int:
     """
     if A < 1:
         raise ValueError("A must be >= 1")
-    if A > K:
-        raise ValueError("paper requires A < K (batches <= iterations)")
+    if A >= K:
+        raise ValueError("paper requires A < K (fewer batches than iterations)")
     delta_k = (2 * K - (A + 1)) // 2  # floor(K - (A+1)/2)
     return A + delta_k
 

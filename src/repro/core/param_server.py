@@ -8,12 +8,14 @@ weight-set payload.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .gwu import agwu_gamma, agwu_update, sgwu_merge
+from .gwu import (agwu_gamma, agwu_update, broadcast_tree, sgwu_merge,
+                  sgwu_merge_and_rebroadcast)
 
 __all__ = ["ParameterServer", "Submission"]
 
@@ -45,30 +47,77 @@ class ParameterServer:
         self.comm_bytes = 0          # Eq. (11) accounting
         self.num_updates = 0
         self.update_log: list[Submission] = []
+        # node-stacked replica cache for the fused outer layer: the SGWU
+        # merge rebroadcasts into the donated stack, so the next round's
+        # pull is free.  Ownership moves to the caller on pull (the fused
+        # round donates the buffers), hence the hand-off-and-clear below.
+        self._stacked: Any = None
+        self._stacked_version = -1
 
     # ------------------------------------------------------------------
     def pull(self, worker: int):
         """Worker fetches the latest global weights (1 transfer)."""
+        self._stacked = None    # mixed-API use: don't pin m replica copies
         self._base[worker] = self.global_weights
         self._base_version[worker] = self.version
         self.comm_bytes += self.weight_bytes
         return self.global_weights, self.version
 
+    def pull_all_stacked(self):
+        """All m workers pull at once: one node-stacked replica tree.
+
+        Bookkeeping is identical to m individual ``pull`` calls (m
+        transfers, every worker's base version advanced to the current
+        version); the payload is a single pytree whose leaves carry a
+        leading node axis — the representation the fused outer layer
+        trains on.  Ownership of the stack transfers to the caller (the
+        fused round donates its buffers); a fresh pull re-broadcasts from
+        the global weights only when no cached stack is available.
+        """
+        if self._stacked is not None and self._stacked_version == self.version:
+            stacked, self._stacked = self._stacked, None
+        else:
+            self._stacked = None
+            stacked = broadcast_tree(self.global_weights, self.num_workers)
+        for j in range(self.num_workers):
+            self._base[j] = self.global_weights
+            self._base_version[j] = self.version
+        self.comm_bytes += self.num_workers * self.weight_bytes
+        return stacked, self.version
+
     def outstanding_versions(self, exclude: Optional[int] = None):
         return [v for w, v in self._base_version.items() if w != exclude]
 
     # ------------------------------------------------------------------
+    def warmup_agwu(self):
+        """Pre-jit the AGWU push path (donated Eq. 10 apply) so the first
+        real push inside the event loop does not pay compile time."""
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, self.global_weights)
+        agwu_update(self.global_weights, zeros, self.global_weights,
+                    1.0, 1.0, donate_local=True)
+
     def push_agwu(self, worker: int, local_weights, accuracy: float,
-                  virtual_time: float = 0.0):
-        """AGWU: apply Eq. (10) immediately (1 transfer in)."""
+                  virtual_time: float = 0.0, donate: bool = False):
+        """AGWU: apply Eq. (10) immediately (1 transfer in).
+
+        With ``donate=True`` the push SUBMITS the local weights: their
+        buffers are handed over to the new global weight set (the
+        BPTTrainer hot path opts in — the worker re-pulls before its next
+        round, so the m× copy the sequential emulation used to pay is
+        gone).  The default keeps the caller's tree readable after the
+        push.  Donation is skipped automatically for numpy trees and for
+        buffers aliasing the current global/base weights.
+        """
         if worker not in self._base:
             raise RuntimeError(f"worker {worker} never pulled weights")
         base_w = self._base[worker]
         k = self._base_version[worker]
         gamma = agwu_gamma(k, max(self.version, 1),
                            self.outstanding_versions(exclude=worker))
+        self._stacked = None    # any AGWU push stales the replica cache
         self.global_weights = agwu_update(
-            self.global_weights, local_weights, base_w, gamma, accuracy)
+            self.global_weights, local_weights, base_w, gamma, accuracy,
+            donate_local=donate)
         self.version += 1
         self.num_updates += 1
         self.comm_bytes += self.weight_bytes
@@ -87,9 +136,33 @@ class ParameterServer:
             self.comm_bytes += self.weight_bytes
             self.update_log.append(
                 Submission(worker, self.version, q, virtual_time))
+        self._stacked = None    # list-path push stales the replica cache
         self.global_weights = sgwu_merge(locals_, accs)
         self.version += 1
         self.num_updates += 1
+        return self.global_weights
+
+    def push_sgwu_stacked(self, stacked_weights,
+                          accuracies: Sequence[float],
+                          virtual_time: float = 0.0):
+        """SGWU barrier merge against the node-stacked representation.
+
+        ``stacked_weights`` is ONE pytree with a leading node axis of size
+        m (worker j's weights at index j); its buffers are DONATED to the
+        merged global weights — callers must not reuse the stack after the
+        push.  Bookkeeping matches m individual submissions.
+        """
+        if len(accuracies) != self.num_workers:
+            raise RuntimeError("SGWU requires a submission from every worker")
+        for worker, q in enumerate(accuracies):
+            self.comm_bytes += self.weight_bytes
+            self.update_log.append(
+                Submission(worker, self.version, float(q), virtual_time))
+        self.global_weights, self._stacked = sgwu_merge_and_rebroadcast(
+            stacked_weights, accuracies)
+        self.version += 1
+        self.num_updates += 1
+        self._stacked_version = self.version
         return self.global_weights
 
     # ------------------------------------------------------------------

@@ -142,3 +142,10 @@ class TrainConfig:
     allocation_batches: int = 4    # A in Alg. 3.1
     local_steps: int = 1           # h: inner steps between merges (agwu)
     remat: bool = False
+    # Fuse the m-node outer layer into ONE vmapped+scanned jitted dispatch
+    # per SGWU round (node-stacked params/opt-states) instead of the
+    # sequential per-node Python loop.  False keeps the legacy loop — the
+    # numerical-equivalence regression tests and the outer_loop benchmark
+    # compare the two.  AGWU is unaffected (its event order IS the
+    # algorithm).
+    fused_outer: bool = True

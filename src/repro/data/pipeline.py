@@ -78,10 +78,40 @@ class IDPADataset:
         return [np.arange(starts[j], starts[j] + totals[j]) % self.n
                 for j in range(len(totals))]
 
-    def node_batch(self, node: int, batch_size: int, rng: np.random.Generator):
-        view = self.node_views()[node]
+    @staticmethod
+    def _select(view: np.ndarray, node: int, batch_size: int,
+                rng: np.random.Generator) -> np.ndarray:
+        """Sample indices from one node's stripe — the ONE sampling rule
+        both the sequential and the stacked batch paths share, so their
+        numerical equivalence holds by construction."""
         take = min(batch_size, len(view))
         if take == 0:
             raise ValueError(f"node {node} has no samples allocated yet")
-        sel = rng.choice(view, size=batch_size, replace=take < batch_size)
+        return rng.choice(view, size=batch_size, replace=take < batch_size)
+
+    def node_batch(self, node: int, batch_size: int, rng: np.random.Generator):
+        sel = self._select(self.node_views()[node], node, batch_size, rng)
         return {k: v[sel] for k, v in self.arrays.items()}
+
+    @property
+    def num_nodes(self) -> int:
+        return self.part.num_nodes
+
+    def stacked_round_batches(self, batch_size: int, local_steps: int,
+                              rng: np.random.Generator):
+        """One SGWU round's data for ALL nodes: ``(m, local_steps, B, ...)``.
+
+        Draws node-by-node, step-by-step — the exact RNG consumption
+        order of the sequential per-node loop's ``node_batch`` calls — so
+        the fused vmapped round sees bit-identical batches and stays
+        numerically equivalent to the legacy path on a fixed seed.  The
+        index stripes are built once for the round (the allocation only
+        changes between rounds, via ``report_durations``).
+        """
+        views = self.node_views()
+        sels = [[self._select(views[j], j, batch_size, rng)
+                 for _ in range(local_steps)]
+                for j in range(self.num_nodes)]
+        return {k: np.stack([np.stack([v[sel] for sel in node])
+                             for node in sels])
+                for k, v in self.arrays.items()}

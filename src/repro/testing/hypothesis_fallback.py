@@ -1,0 +1,199 @@
+"""Dependency-free fallback for the slice of the ``hypothesis`` API the
+test-suite uses (``given``, ``settings``, ``strategies.integers/floats/
+lists/sampled_from``).
+
+Hermetic containers without network access cannot install the real
+``hypothesis`` (it is declared in the ``test`` extra, and CI uses it);
+``install()`` registers this module under the ``hypothesis`` name so the
+property-based tests still *run* offline.  It is a miniature example
+generator, not a replacement: no shrinking, no coverage-guided search.
+Examples are deterministic — boundary probes (all-min, all-max) first,
+then pseudo-random draws seeded from the test's qualified name — so a
+failure reproduces across runs.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["install", "given", "settings", "strategies"]
+
+
+class SearchStrategy:
+    """Base strategy: ``example(rng)`` draws one value, ``boundary()``
+    returns deterministic edge values probed before the random draws."""
+
+    def example(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+    def boundary(self) -> list:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value, self.max_value = int(min_value), int(max_value)
+
+    def example(self, rng):
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+    def boundary(self):
+        return [self.min_value, self.max_value]
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.min_value, self.max_value = float(min_value), float(max_value)
+
+    def example(self, rng):
+        return float(self.min_value
+                     + (self.max_value - self.min_value) * rng.random())
+
+    def boundary(self):
+        return [self.min_value, self.max_value]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def example(self, rng):
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+    def boundary(self):
+        return [self.elements[0], self.elements[-1]]
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0,
+                 max_size: int | None = None):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = self.min_size + 10 if max_size is None else int(max_size)
+
+    def example(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.example(rng) for _ in range(n)]
+
+    def boundary(self):
+        lo, hi = self.elements.boundary()[0], self.elements.boundary()[-1]
+        return [[lo] * self.min_size, [hi] * self.max_size]
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int | None = None) -> SearchStrategy:
+    return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+# ----------------------------------------------------------------------
+class settings:
+    """Decorator recording example-count; deadlines are ignored."""
+
+    def __init__(self, max_examples: int = 50, deadline=None, **_ignored):
+        self.max_examples = int(max_examples)
+        self.deadline = deadline
+
+    def __call__(self, func):
+        func._fallback_settings = self
+        return func
+
+
+_DEFAULT_SETTINGS = settings()
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the wrapped test over generated examples.
+
+    Mirrors hypothesis' binding rules: positional strategies map onto the
+    *rightmost* parameters of the test function, keyword strategies by name.
+    The drawn parameters are stripped from the wrapper's signature so pytest
+    does not mistake them for fixtures.
+    """
+    if arg_strategies and kw_strategies:
+        raise TypeError("mix of positional and keyword strategies unsupported")
+
+    def decorate(func):
+        sig = inspect.signature(func)
+        names = list(sig.parameters)
+        if arg_strategies:
+            bound = dict(zip(names[len(names) - len(arg_strategies):],
+                             arg_strategies))
+        else:
+            bound = dict(kw_strategies)
+        missing = set(bound) - set(names)
+        if missing:
+            raise TypeError(f"strategies for unknown parameters: {missing}")
+
+        @functools.wraps(func)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", _DEFAULT_SETTINGS)
+            rng = np.random.default_rng(
+                zlib.crc32(func.__qualname__.encode()))
+            for i in range(max(cfg.max_examples, 2)):
+                drawn = {}
+                for name, strat in bound.items():
+                    edges = strat.boundary()
+                    if i < 2:               # all-min then all-max probes
+                        drawn[name] = edges[0] if i == 0 else edges[-1]
+                    else:
+                        drawn[name] = strat.example(rng)
+                try:
+                    func(*args, **drawn, **kwargs)
+                except Exception:
+                    print(f"Falsifying example ({func.__qualname__}): "
+                          f"{drawn!r}", file=sys.stderr)
+                    raise
+
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for n, p in sig.parameters.items() if n not in bound])
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=func)
+        return wrapper
+
+    return decorate
+
+
+# ----------------------------------------------------------------------
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.lists = lists
+strategies.sampled_from = sampled_from
+strategies.SearchStrategy = SearchStrategy
+
+
+def install():
+    """Register this fallback under ``hypothesis`` in ``sys.modules``.
+
+    No-op if the real hypothesis is importable or a fallback is already
+    installed.  Returns the module object that will serve ``import
+    hypothesis``.
+    """
+    if "hypothesis" in sys.modules:
+        return sys.modules["hypothesis"]
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+    return mod

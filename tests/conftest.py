@@ -1,6 +1,12 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see ONE device;
 only launch/dryrun.py (run as a subprocess) forces 512 placeholder devices.
 """
+try:
+    import hypothesis  # noqa: F401 — real install (the `test` extra) wins
+except ImportError:
+    from repro.testing.hypothesis_fallback import install as _install_hyp
+    _install_hyp()
+
 import jax
 import numpy as np
 import pytest

@@ -27,6 +27,14 @@ class TestEffectiveIterations:
         with pytest.raises(ValueError):
             effective_iterations(10, 11)
 
+    def test_boundary_a_equals_k_rejected(self):
+        """Paper requires A < K strictly; A == K must raise, A == K-1 is
+        the largest legal allocation-batch count."""
+        with pytest.raises(ValueError):
+            effective_iterations(10, 10)
+        assert effective_iterations(10, 9) == 10 + 9 // 2 - 1 + 1  # K+floor((A-1)/2)
+        assert effective_iterations(2, 1) == 2
+
 
 class TestIDPA:
     def test_first_batch_eq2(self):
