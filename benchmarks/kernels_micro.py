@@ -30,6 +30,53 @@ def bench_conv2d():
     emit("kernel_conv2d_32x32x16x32", us, f"pallas_max_err={err:.2e}")
 
 
+def _lax_conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(out + b)
+
+
+def bench_conv2d_fwd_bwd(gate_atol: float = 1e-4):
+    """Forward+backward conv benchmark, GATED against the lax.conv oracle.
+
+    ``us_per_call`` times the jitted lax.conv value_and_grad on CPU (the
+    achievable-lower-bound signal, like the other benches); ``derived``
+    carries the Pallas custom_vjp max |err| for out/dx/dw/db vs that
+    oracle.  Any error above ``gate_atol`` raises — the benchmark doubles
+    as the fwd+bwd correctness gate runnable outside pytest.
+    """
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (4, 16, 16, 8))
+    w = jax.random.normal(k2, (3, 3, 8, 16))
+    b = jax.random.normal(k3, (16,))
+
+    def loss_lax(x_, w_, b_):
+        return jnp.sum(_lax_conv(x_, w_, b_) ** 2)
+
+    def loss_pallas(x_, w_, b_):
+        out = conv2d_pallas(x_, w_, b_, activation="relu")
+        return jnp.sum(out ** 2)
+
+    us = time_call(jax.jit(jax.value_and_grad(loss_lax, argnums=(0, 1, 2))),
+                   x, w, b)
+    out_err = float(jnp.abs(conv2d_pallas(x, w, b, activation="relu") -
+                            _lax_conv(x, w, b)).max())
+    got = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(loss_lax, argnums=(0, 1, 2))(x, w, b)
+    errs = {"out": out_err}
+    for name, g, r in zip(("dx", "dw", "db"), got, want):
+        errs[name] = float(jnp.abs(g - r).max())
+    scale = float(max(jnp.abs(r).max() for r in want))
+    derived = ",".join(f"{k}_err={v:.2e}" for k, v in errs.items())
+    emit("kernel_conv2d_fwdbwd_16x16x8x16", us, derived)
+    worst = max(errs.values())
+    if worst > gate_atol * max(scale, 1.0):
+        raise RuntimeError(
+            f"pallas conv fwd+bwd off the lax.conv oracle: {derived} "
+            f"(gate {gate_atol:.0e} x scale {scale:.1f})")
+
+
 def bench_flash():
     key = jax.random.PRNGKey(1)
     ks = jax.random.split(key, 3)
@@ -64,5 +111,6 @@ def bench_rmsnorm():
 
 def run_all():
     bench_conv2d()
+    bench_conv2d_fwd_bwd()
     bench_flash()
     bench_rmsnorm()

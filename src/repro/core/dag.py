@@ -14,6 +14,7 @@ Fig. 14d).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 from typing import Iterable, Optional, Sequence
 
@@ -22,6 +23,7 @@ import numpy as np
 __all__ = [
     "Task", "TaskDAG", "conv_layer_tasks", "cnn_training_dag",
     "priority_schedule", "ScheduleResult", "conv_output_shape",
+    "conv_grid_tasks", "choose_oc_tile",
 ]
 
 
@@ -174,6 +176,58 @@ def cnn_training_dag(layer_specs: Sequence[dict], tile: int = 4) -> TaskDAG:
                 for b, t in enumerate(fwd_layers[li][: max(1, len(fwd_layers[li]) // 4)])]
         bwd_prev = err + grad
     return dag
+
+
+# ----------------------------------------------------------------------
+# Executed-grid decomposition (PT_Conv <-> pallas_call grid)
+# ----------------------------------------------------------------------
+def conv_grid_tasks(dag: TaskDAG, batch: int, cout: int, oc_tile: int,
+                    cost_per_channel: float = 1.0,
+                    deps: Sequence[int] = (),
+                    name: str = "pt_conv") -> list[int]:
+    """The TPU-executed task list: one task per (batch, oc-tile) grid cell.
+
+    This is the paper's PT_Conv expressed at the granularity the Pallas
+    kernel actually runs — the grid is (batch, cout/oc_tile), each cell a
+    kh*kw-matmul task over one output-channel tile.  All tasks are mutually
+    independent; each costs ``oc_tile * cost_per_channel``.
+    """
+    if oc_tile <= 0 or cout % oc_tile:
+        raise ValueError(f"oc_tile {oc_tile} must divide cout {cout}")
+    cost = oc_tile * cost_per_channel
+    return [dag.add(f"{name}[{b}:{c}]", cost, deps)
+            for b in range(batch) for c in range(0, cout, oc_tile)]
+
+
+@functools.lru_cache(maxsize=None)
+def choose_oc_tile(batch: int, cout: int, workers: int = 8,
+                   min_tile: int = 8) -> int:
+    """Pick the output-channel tile for the executed conv grid (PT_Conv).
+
+    For every candidate tile (divisors of ``cout`` no smaller than
+    ``min_tile``, clamped to ``cout``) the candidate task grid is built with
+    :func:`conv_grid_tasks` and list-scheduled with Alg. 4.2
+    (:func:`priority_schedule`) over ``workers`` threads; the tile with the
+    minimal makespan wins, larger tiles breaking ties (fewer, bigger
+    MXU-friendly tasks).  Task decomposition and the executed Pallas grid
+    stay one concept: the kernels run exactly the grid this model scores.
+
+    ``min_tile`` keeps tiles lane-friendly on TPU — per-filter scalar tasks
+    (the paper's CPU/GPU granularity) waste the 128-wide MXU lanes.
+    """
+    if batch < 1 or cout < 1:
+        raise ValueError("batch and cout must be >= 1")
+    floor = min(cout, max(1, min_tile))
+    best_tile, best_makespan = cout, float("inf")
+    for tile in range(cout, floor - 1, -1):
+        if cout % tile:
+            continue
+        dag = TaskDAG()
+        conv_grid_tasks(dag, batch, cout, tile)
+        makespan = priority_schedule(dag, workers).makespan
+        if makespan < best_makespan - 1e-9:
+            best_tile, best_makespan = tile, makespan
+    return best_tile
 
 
 # ----------------------------------------------------------------------

@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the paper's compute hot spots + the ops dispatch.
+
+Kernel modules (`conv2d`, `flash_attention`, `rmsnorm`) expose raw
+``*_pallas`` entry points; ``ops`` wraps them with ref fallbacks and the
+``REPRO_KERNEL_IMPL`` switch.  See docs/KERNELS.md.
+"""
+from __future__ import annotations
+
+__all__ = ["resolve_interpret"]
+
+
+def resolve_interpret(interpret):
+    """Resolve a kernel's ``interpret=None`` default via ``ops._interpret``.
+
+    Kernel entry points must NOT hard-default ``interpret=True`` — that
+    silently ships interpret-mode kernels to TPU.  ``None`` means "ask the
+    dispatcher": interpret mode everywhere except real TPU silicon.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    from repro.kernels import ops      # deferred: ops imports the kernels
+    return ops._interpret()

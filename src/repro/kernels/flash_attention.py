@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 __all__ = ["flash_attention_pallas"]
 
 NEG_INF = -1e30
@@ -69,8 +71,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            softcap: float = 0.0, q_tile: int = 128,
-                           k_tile: int = 128, interpret: bool = True):
-    """q: (B,H,Sq,D); k,v: (B,KH,Sk,D) -> (B,H,Sq,D)."""
+                           k_tile: int = 128, interpret: bool | None = None):
+    """q: (B,H,Sq,D); k,v: (B,KH,Sk,D) -> (B,H,Sq,D).
+
+    ``interpret=None`` resolves via ``ops._interpret()`` (compiled on TPU).
+    """
+    interpret = resolve_interpret(interpret)
     B, H, Sq, D = q.shape
     KH, Sk = k.shape[1], k.shape[2]
     G = H // KH

@@ -1,18 +1,26 @@
 """Jit'd public wrappers over the Pallas kernels with jnp-ref fallbacks.
 
 Implementation selection:
-  * ``REPRO_KERNEL_IMPL=ref``    — pure-jnp oracles (default on CPU; fully
-    differentiable, what the models and the 512-device dry-run lower).
-  * ``REPRO_KERNEL_IMPL=pallas`` — Pallas kernels (interpret=True on CPU,
-    compiled on TPU).  Forward-only paths.
+  * ``REPRO_KERNEL_IMPL=ref``    — pure-jnp oracles (default on CPU; what
+    the 512-device dry-run lowers).
+  * ``REPRO_KERNEL_IMPL=pallas`` — Pallas kernels (interpret mode off TPU,
+    compiled on TPU).  ``conv2d`` is fully differentiable through its
+    ``custom_vjp`` backward kernels, so this is a real training path.
+
+Kernel entry points take ``interpret=None`` and resolve it through
+``_interpret()`` here — the single switch that decides interpret-vs-compiled
+— so no call site can silently ship interpret-mode kernels to a TPU.
+
+``conv2d``'s default ``oc_tile`` comes from ``core.dag.choose_oc_tile``:
+the paper's task-decomposition cost model (Alg. 4.2 list scheduling over
+the candidate PT_Conv grids) picks the output-channel tile the executed
+Pallas grid uses, keeping decomposition and execution one concept.
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .conv2d import conv2d_pallas
@@ -31,14 +39,34 @@ def default_impl() -> str:
 
 
 def _interpret() -> bool:
+    """Interpret-mode switch: compiled kernels only on real TPU silicon."""
     return jax.default_backend() != "tpu"
 
 
-def conv2d(x, w, padding: str = "SAME", stride: int = 1, impl: str = ""):
+def conv2d(x, w, b=None, padding: str = "SAME", stride: int = 1,
+           activation: str = "none", impl: str = "",
+           oc_tile: int | None = None):
+    """Conv + optional fused bias/activation epilogue (paper Eq. 1+2).
+
+    The Pallas path (stride 1) is differentiable end-to-end via
+    ``custom_vjp``; ``oc_tile=None`` asks the §4 cost model for the task
+    granularity, ``oc_tile=0`` forces one task per batch image.
+    """
     impl = impl or default_impl()
     if impl == "pallas" and stride == 1:
-        return conv2d_pallas(x, w, padding=padding, interpret=_interpret())
-    return ref.conv2d_ref(x, w, padding=padding, stride=stride)
+        if oc_tile is None:
+            from repro.core.dag import choose_oc_tile
+            oc_tile = choose_oc_tile(int(x.shape[0]), int(w.shape[-1]))
+        return conv2d_pallas(x, w, b, padding=padding, activation=activation,
+                             oc_tile=oc_tile, interpret=_interpret())
+    out = ref.conv2d_ref(x, w, padding=padding, stride=stride)
+    if b is not None:
+        out = out + b.astype(out.dtype)    # match the kernel's output dtype
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out
 
 
 def max_pool2d(x, window: int = 2, stride: int = 2):

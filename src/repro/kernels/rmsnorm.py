@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 __all__ = ["rmsnorm_pallas"]
 
 
@@ -23,8 +25,9 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
 
 
 def rmsnorm_pallas(x, scale, eps: float = 1e-6, row_tile: int = 256,
-                   interpret: bool = True):
-    """x: (..., d); scale: (d,)."""
+                   interpret: bool | None = None):
+    """x: (..., d); scale: (d,).  ``interpret=None`` -> ops._interpret()."""
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     d = x.shape[-1]
     rows = int(jnp.prod(jnp.array(orig_shape[:-1]))) if len(orig_shape) > 1 else 1

@@ -1,9 +1,12 @@
 """The paper's CNN (feature extractor + fully-connected classifier, §3.1).
 
-Configurable to the seven network scales of Table 2.  Forward convolutions
-route through ``repro.kernels.ops.conv2d`` (Pallas kernel on TPU, jnp ref on
-CPU).  The training objective is the paper's squared error over output
-neurons (Eq. 16); gradients via jax.grad implement Eq. 17-23 exactly.
+Configurable to the seven network scales of Table 2.  Convolutions route
+through ``models.layers.conv2d`` -> ``kernels.ops.conv2d`` with the bias +
+relu epilogue fused into the kernel (Eq. 1+2 as one pallas_call); under
+``REPRO_KERNEL_IMPL=pallas`` training runs the differentiable Pallas conv
+(custom_vjp backward kernels), under ``ref`` the jnp oracle.  The training
+objective is the paper's squared error over output neurons (Eq. 16);
+gradients via jax.grad implement Eq. 17-23 exactly.
 """
 from __future__ import annotations
 
@@ -12,6 +15,8 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.models import layers
 
 __all__ = ["CNNConfig", "init_cnn", "cnn_forward", "cnn_loss", "cnn_accuracy",
            "TABLE2_CASES", "make_case"]
@@ -68,13 +73,8 @@ def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32):
     params = {"conv": [], "fc": []}
     keys = jax.random.split(key, cfg.conv_layers + cfg.fc_layers)
     for i, (cin, cout, _, _) in enumerate(shapes):
-        fan = cin * cfg.filter_size ** 2
-        params["conv"].append({
-            "w": jax.random.normal(keys[i], (cfg.filter_size, cfg.filter_size,
-                                             cin, cout), dtype)
-            * jnp.sqrt(2.0 / fan),
-            "b": jnp.zeros((cout,), dtype),
-        })
+        params["conv"].append(layers.init_conv2d(
+            keys[i], cfg.filter_size, cfg.filter_size, cin, cout, dtype))
     d_in = final * final * cfg.filters
     dims = [d_in] + [cfg.fc_neurons] * (cfg.fc_layers - 1) + [cfg.num_classes]
     for j in range(cfg.fc_layers):
@@ -93,8 +93,7 @@ def cnn_forward(params, images, cfg: CNNConfig):
     x = images
     shapes, _ = _conv_shapes(cfg)
     for p, (_, _, _, pooled) in zip(params["conv"], shapes):
-        x = ops.conv2d(x, p["w"], padding="SAME") + p["b"]
-        x = jax.nn.relu(x)
+        x = layers.conv2d(p, x, padding="SAME", activation="relu")
         if pooled:
             x = ops.max_pool2d(x, window=2, stride=2)
     x = x.reshape(x.shape[0], -1)

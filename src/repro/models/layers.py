@@ -9,7 +9,7 @@ from repro.core.shardlib import constrain
 __all__ = [
     "rms_norm", "init_dense", "dense", "init_mlp", "mlp",
     "rope_frequencies", "apply_rope", "init_embedding", "embed",
-    "softcap", "init_rms_norm",
+    "softcap", "init_rms_norm", "init_conv2d", "conv2d",
 ]
 
 
@@ -28,6 +28,30 @@ def rms_norm(params, x, eps: float = 1e-6):
 def softcap(x, cap: float):
     """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
     return jnp.tanh(x / cap) * cap
+
+
+def init_conv2d(key, kh: int, kw: int, c_in: int, c_out: int,
+                dtype=jnp.float32):
+    """He-initialised HWIO conv filter + zero bias."""
+    fan = c_in * kh * kw
+    return {
+        "w": jax.random.normal(key, (kh, kw, c_in, c_out), dtype)
+        * jnp.sqrt(2.0 / fan),
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv2d(params, x, padding: str = "SAME", stride: int = 1,
+           activation: str = "none"):
+    """Conv + fused bias/activation via the kernels.ops dispatch.
+
+    All model conv sites go through here so ``REPRO_KERNEL_IMPL=pallas``
+    trains through the differentiable Pallas kernel (custom_vjp backward),
+    and ``ref`` lowers the jnp oracle — one switch, one call site.
+    """
+    from repro.kernels import ops
+    return ops.conv2d(x, params["w"], params["b"], padding=padding,
+                      stride=stride, activation=activation)
 
 
 def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32):

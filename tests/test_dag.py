@@ -4,7 +4,8 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.dag import (TaskDAG, cnn_training_dag, conv_layer_tasks,
+from repro.core.dag import (TaskDAG, choose_oc_tile, cnn_training_dag,
+                            conv_grid_tasks, conv_layer_tasks,
                             conv_output_shape, priority_schedule)
 
 
@@ -23,6 +24,49 @@ class TestConvDecomposition:
         dag = TaskDAG()
         tids = conv_layer_tasks(dag, 8, 8, 3, 3, pad=1, tile=4)
         assert len(tids) == 4                # (8/4)^2
+
+
+class TestExecutedGrid:
+    """PT_Conv at pallas-grid granularity + the oc_tile cost model."""
+
+    def test_grid_task_count_and_cost(self):
+        dag = TaskDAG()
+        tids = conv_grid_tasks(dag, batch=4, cout=16, oc_tile=8,
+                               cost_per_channel=2.0)
+        assert len(tids) == 4 * (16 // 8)
+        assert all(dag.tasks[t].cost == 16.0 for t in tids)
+
+    def test_grid_rejects_non_divisor(self):
+        with pytest.raises(ValueError):
+            conv_grid_tasks(TaskDAG(), batch=1, cout=16, oc_tile=5)
+
+    def test_choose_tile_divides_cout(self):
+        for batch, cout in [(1, 4), (2, 16), (8, 32), (3, 12), (16, 128)]:
+            tile = choose_oc_tile(batch, cout)
+            assert cout % tile == 0 and tile >= 1
+
+    def test_small_cout_stays_untiled(self):
+        # below min_tile the MXU-lane floor keeps one task per image
+        assert choose_oc_tile(4, 4) == 4
+
+    def test_wide_conv_tiles_to_fill_workers(self):
+        # B=1, Cout=128, 8 workers: untiled = 1 task (makespan 128);
+        # tile 16 = 8 tasks in parallel (makespan 16) — the model must tile.
+        assert choose_oc_tile(1, 128, workers=8) == 16
+
+    def test_saturated_batch_prefers_big_tiles(self):
+        # B=64 images already saturate 8 workers; splitting channels only
+        # adds tasks without shortening the critical resource.
+        assert choose_oc_tile(64, 32, workers=8) == 32
+
+    def test_chosen_tile_schedules_no_worse_than_untiled(self):
+        for batch, cout in [(1, 64), (2, 32), (5, 16)]:
+            tile = choose_oc_tile(batch, cout, workers=8)
+            def makespan(t):
+                dag = TaskDAG()
+                conv_grid_tasks(dag, batch, cout, t)
+                return priority_schedule(dag, 8).makespan
+            assert makespan(tile) <= makespan(cout) + 1e-9
 
 
 class TestPriorities:

@@ -1,0 +1,25 @@
+"""Docs stay linked: the tier-1 mirror of the CI docs link-check job."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_required_docs_exist():
+    for rel in ("docs/ARCHITECTURE.md", "docs/KERNELS.md", "README.md"):
+        assert (REPO / rel).is_file(), f"missing {rel}"
+
+
+def test_readme_links_docs():
+    readme = (REPO / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/KERNELS.md" in readme
+
+
+def test_no_dangling_intra_repo_links():
+    proc = subprocess.run(
+        [sys.executable, "tools/check_links.py", "README.md", "docs",
+         "ROADMAP.md"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, f"\n{proc.stdout}\n{proc.stderr}"

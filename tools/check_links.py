@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Markdown intra-repo link checker (the CI docs job).
+
+Scans markdown files for ``[text](target)`` links, ignores external
+schemes (http/https/mailto) and pure anchors, resolves relative targets
+against each file's directory, and fails listing every dangling path.
+
+Usage: python tools/check_links.py [file_or_dir ...]
+Defaults to README.md + docs/ when run from the repo root.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — plain target up to the first ')' or whitespace, or an
+# <angle-wrapped> target (CommonMark's form for paths with spaces); images
+# (![alt](target)) match too via the optional leading '!'.
+_LINK = re.compile(
+    r"!?\[[^\]]*\]\((?:<([^>]+)>|([^)\s]+))(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(paths: list[Path]):
+    """Expand args to markdown files; a bad argument is an error, not a
+    silent skip — a typo'd CI invocation must fail, not pass vacuously."""
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.is_file() and p.suffix == ".md":
+            yield p
+        else:
+            raise FileNotFoundError(
+                f"check_links: not a directory or markdown file: {p}")
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    in_fence = False
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if line.lstrip().startswith(("```", "~~~")):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        line = re.sub(r"`[^`]*`", "", line)    # inline code spans
+        for m in _LINK.finditer(line):
+            target = m.group(1) or m.group(2)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md}:{lineno}: dangling link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(a) for a in argv] or [Path("README.md"), Path("docs")]
+    try:
+        files = list(iter_markdown(roots))
+    except FileNotFoundError as e:
+        print(e, file=sys.stderr)
+        return 2
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 2
+    errors = [e for md in files for e in check_file(md)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} dangling links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
