@@ -1,6 +1,7 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -20,6 +21,13 @@ def emit(name: str, us_per_call: float, derived: str):
     line = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(line)
     print(line)
+
+
+def section(title: str):
+    """Human-facing section banner.  Goes to STDERR on purpose: stdout is
+    the machine-parseable ``name,us_per_call,derived`` CSV stream the CI
+    benchmark gate consumes."""
+    print(f"== {title} ==", file=sys.stderr)
 
 
 def time_call(fn, *args, repeats=3):

@@ -1,20 +1,46 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Sections:
+Stdout carries ONLY the ``name,us_per_call,derived`` CSV stream (the CI
+benchmark gate parses it); section banners and any other prose go to
+stderr via ``common.section``.  Sections:
   * paper figures (Fig. 10-15, Table 1) — BPT-CNN reproduction metrics
   * kernel micro-benchmarks — jnp ref timing + Pallas correctness
   * roofline report — read from experiments/dryrun artifacts
+
+``--json PATH`` additionally writes every emitted row as a JSON list of
+``{name, us_per_call, derived}`` objects (workflow-artifact format).
 """
-import sys
+import argparse
+import json
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default="",
+                    help="also write the emitted rows as JSON")
+    args = ap.parse_args()
+
     from . import kernels_micro, paper_figures, roofline_report
+    from .common import ROWS, section
     print("name,us_per_call,derived")
+    section("paper figures (Fig. 10-15, Table 1)")
     paper_figures.run_all()
+    section("kernel micro-benchmarks")
     kernels_micro.run_all()
+    section("roofline report (pod)")
     roofline_report.run_all(mesh="pod")
+    section("roofline report (multipod)")
     roofline_report.run_all(mesh="multipod")
+
+    if args.json:
+        rows = []
+        for line in ROWS:
+            name, us, derived = line.split(",", 2)
+            rows.append({"name": name, "us_per_call": float(us),
+                         "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,15 @@ def main(argv=None):
     ap.add_argument("--image-size", type=int, default=32)
     ap.add_argument("--fc-neurons", type=int, default=2000,
                     help="2000 -> ~100M params (paper case5-7 FC scale)")
+    ap.add_argument("--strategy", choices=("sgwu", "agwu"), default="agwu")
+    ap.add_argument("--device-outer", action="store_true",
+                    help="shard the node axis over a real `nodes` device "
+                    "mesh (needs >= --nodes devices, e.g. XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4; falls back "
+                    "to the fused vmap emulation otherwise)")
+    ap.add_argument("--uneven-batches", action="store_true",
+                    help="IDPA-proportional per-node batch loads "
+                    "(padded+masked stripes; needs --strategy sgwu)")
     ap.add_argument("--small", action="store_true",
                     help="tiny demo (fast)")
     args = ap.parse_args(argv)
@@ -56,22 +65,29 @@ def main(argv=None):
     ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=args.nodes,
                      batches=min(3, rounds), frequencies=1.0 / speeds,
                      idpa_mode="balanced")
-    tc = TrainConfig(outer_strategy="agwu", outer_nodes=args.nodes,
+    tc = TrainConfig(outer_strategy=args.strategy, outer_nodes=args.nodes,
                      optimizer="adamw", learning_rate=1e-3,
                      warmup_steps=10, total_steps=args.steps,
-                     local_steps=args.local_steps)
+                     local_steps=args.local_steps,
+                     device_outer=args.device_outer,
+                     uneven_batches=args.uneven_batches)
     trainer = BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds,
                          tc, batch_size=32, eval_fn=eval_fn,
                          speed_factors=speeds)
     t0 = time.time()
     rep = trainer.train(rounds=rounds)
-    print(f"[bpt-cnn] {rep.steps} pushes in {time.time()-t0:.0f}s wall")
+    print(f"[bpt-cnn] {rep.steps} pushes in {time.time()-t0:.0f}s wall "
+          f"({rep.strategy}/{rep.backend} outer backend, "
+          f"{len(jax.devices())} device(s))")
     print(f"[bpt-cnn] accuracy trace: "
           f"{[(round(t,1), round(a,3)) for t, a in rep.accuracies]}")
     print(f"[bpt-cnn] IDPA allocation (samples/node): {rep.allocation}")
     print(f"[bpt-cnn] sync_wait={rep.sync_wait:.2f}s (AGWU -> 0) "
           f"comm={rep.comm_bytes/2**20:.1f}MB")
-    assert rep.accuracies[-1][1] > 0.3, "should beat 10-class chance"
+    # sanity: beat 10-class chance.  AGWU applies m× more global updates
+    # than SGWU in the same --steps budget, so it clears a higher bar.
+    floor = 0.3 if args.strategy == "agwu" else 0.15
+    assert rep.accuracies[-1][1] > floor, "should beat 10-class chance"
 
 
 if __name__ == "__main__":

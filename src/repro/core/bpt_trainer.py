@@ -17,6 +17,15 @@ outer-layer synchronization cost the paper attacks.  AGWU keeps its
 event-ordered heap (the ordering IS the algorithm) but pushes through a
 pre-jitted, buffer-donating Eq. (10) path.
 
+With ``TrainConfig.device_outer`` the node axis is additionally placed on
+a real device mesh (``launch/mesh.py`` `nodes` family): the stacked
+pytrees are sharded one node per device, the round runs under
+``shard_map`` (node axis = device axis), and the Eq. 7 merge is an
+on-device weighted all-reduce inside a device-resident ParameterServer —
+the architecture the paper actually describes, with the vmap path as the
+transparent single-device fallback.  AGWU under ``device_outer`` keeps
+each node's weights on its own device and pushes Eq. 10 deltas.
+
 Inner layer: the jitted step itself — XLA/Pallas task parallelism
 (DESIGN.md §3) — plus optional activation remat.
 """
@@ -32,10 +41,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import IDPADataset
+from repro.launch.mesh import make_mesh, make_nodes_mesh
 from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
                                     make_optimizer, warmup_cosine)
 
-from .gwu import broadcast_tree
+from .gwu import broadcast_tree, tree_sub
 from .param_server import ParameterServer
 from .types import TrainConfig
 
@@ -53,10 +63,17 @@ class TrainReport:
     comm_bytes: int
     allocation: np.ndarray
     final_params: object = None
+    # which outer-layer execution backend actually ran: "device" (sharded
+    # over a real `nodes` mesh), "vmap" (fused single-device emulation),
+    # "sequential" (legacy loop), "heap"/"heap-device" (AGWU), "scan"
+    # (sync baseline).  The device path falls back to "vmap" when the
+    # backend has too few devices — callers can assert on this.
+    backend: str = ""
 
     def summary(self) -> dict:
         return {
             "strategy": self.strategy,
+            "backend": self.backend,
             "steps": self.steps,
             "final_loss": round(float(self.losses[-1]), 4) if self.losses else None,
             "final_acc": round(float(self.accuracies[-1][1]), 4)
@@ -140,6 +157,8 @@ class BPTTrainer:
         self._fused_round = jax.jit(
             jax.vmap(node_round, in_axes=(0, 0, 0, None)),
             donate_argnums=(0, 1))
+        self._node_round = node_round
+        self._device_rounds = {}     # mesh -> shard_mapped round (lazy)
 
     def _q_effective(self, q: float) -> float:
         """Relative contribution weight Q (see accuracy_weighting above)."""
@@ -200,6 +219,13 @@ class BPTTrainer:
     def train(self, rounds: int) -> TrainReport:
         if self.tc.outer_strategy == "sgwu":
             return self._train_sgwu(rounds)
+        if self.tc.uneven_batches:
+            # only the stacked-round SGWU paths realize the padded+masked
+            # stripes; silently training with uniform batches would fake
+            # the heterogeneity the flag promises
+            raise ValueError(
+                "uneven_batches needs outer_strategy='sgwu' (the fused or "
+                f"device outer path), not {self.tc.outer_strategy!r}")
         if self.tc.outer_strategy == "agwu":
             return self._train_agwu(rounds)
         return self._train_sync(rounds)
@@ -225,13 +251,77 @@ class BPTTrainer:
             if self.eval_fn and (r + 1) % 5 == 0:
                 accs.append((clock, self._eval(params)))
         return TrainReport("sync", rounds, losses, accs, clock, 0.0, 0,
-                           self.dataset.totals, params)
+                           self.dataset.totals, params, backend="scan")
 
     # ------------------------------ SGWU -------------------------------
     def _train_sgwu(self, rounds: int) -> TrainReport:
-        if self.tc.fused_outer:
+        if self.tc.device_outer:
+            mesh = self._nodes_mesh()
+            if mesh is not None:
+                return self._train_sgwu_device(rounds, mesh)
+            # too few devices: fall back transparently to the fused vmap
+        if self.tc.fused_outer or self.tc.device_outer:
             return self._train_sgwu_fused(rounds)
         return self._train_sgwu_sequential(rounds)
+
+    def _nodes_mesh(self):
+        """The `nodes` mesh for the device-sharded outer layer, or None
+        when the backend has too few devices (the transparent fallback).
+        A ``mesh_name`` whose `nodes` axis mismatches ``outer_nodes`` is a
+        config bug, not a capacity problem, and raises."""
+        try:
+            mesh = make_mesh(self.tc.mesh_name) if self.tc.mesh_name \
+                else make_nodes_mesh(self.m)
+        except RuntimeError:
+            return None
+        if "nodes" not in mesh.axis_names or mesh.shape["nodes"] != self.m:
+            raise ValueError(
+                f"mesh {self.tc.mesh_name!r} needs a `nodes` axis of size "
+                f"{self.m}, has axes {dict(mesh.shape)}")
+        return mesh
+
+    def _get_device_round(self, mesh):
+        """shard_map the fused round over the mesh's `nodes` axis: node
+        axis = device axis, so each device runs ITS node's scan on ITS
+        resident block of the stacked pytrees — no cross-device traffic
+        until the merge all-reduce."""
+        if mesh not in self._device_rounds:
+            from jax.experimental.shard_map import shard_map
+            P = jax.sharding.PartitionSpec
+            node_round = self._node_round
+
+            def shard_body(stacked_w, stacked_opt, batches, step):
+                # per-device blocks keep a leading node axis (m/devices)
+                return jax.vmap(node_round, in_axes=(0, 0, 0, None))(
+                    stacked_w, stacked_opt, batches, step)
+
+            sm = shard_map(shard_body, mesh=mesh,
+                           in_specs=(P("nodes"), P("nodes"), P("nodes"),
+                                     P()),
+                           out_specs=(P("nodes"), P("nodes"), P("nodes")))
+            self._device_rounds[mesh] = jax.jit(sm, donate_argnums=(0, 1))
+        return self._device_rounds[mesh]
+
+    def _train_sgwu_device(self, rounds: int, mesh) -> TrainReport:
+        """Device-sharded outer layer: the paper's m physical nodes.
+
+        Identical round structure to the fused path (the shared
+        ``_run_stacked_rounds`` loop), but the node-stacked pytrees are
+        placed with ``NamedSharding`` over the mesh's `nodes` axis (node
+        j resident on device j), the round runs under ``shard_map``, and
+        the Eq. 7 merge is an on-device weighted all-reduce inside the
+        device-resident ParameterServer — the global weights never
+        funnel through host or a single device.
+        """
+        server = ParameterServer(self.params0, self.m, mesh=mesh)
+        node_sharding = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("nodes"))
+        stacked_opt = jax.device_put(
+            broadcast_tree(self.opt.init(self.params0), self.m),
+            node_sharding)
+        return self._run_stacked_rounds(
+            rounds, server, stacked_opt, self._get_device_round(mesh),
+            node_sharding, backend="device")
 
     def _train_sgwu_fused(self, rounds: int) -> TrainReport:
         """Fused outer layer: the m nodes' round is ONE jitted dispatch.
@@ -239,21 +329,37 @@ class BPTTrainer:
         Node-stacked params/opt-states flow ``pull_all_stacked`` →
         ``_fused_round`` (vmap over nodes, scan over local steps, stacked
         buffers donated) → ``push_sgwu_stacked`` (jitted Eq. 7 merge on the
-        stack, donated).  Per-node virtual durations are an equal share of
-        the measured round wall scaled by the node speed factors — the
-        heterogeneity emulation the sequential loop derived from per-node
-        measurement.
+        stack, donated).
         """
         server = ParameterServer(self.params0, self.m)
         stacked_opt = broadcast_tree(self.opt.init(self.params0), self.m)
+        return self._run_stacked_rounds(
+            rounds, server, stacked_opt, self._fused_round, None,
+            backend="vmap")
+
+    def _run_stacked_rounds(self, rounds: int, server: ParameterServer,
+                            stacked_opt, round_fn, batch_sharding,
+                            backend: str) -> TrainReport:
+        """The stacked SGWU round loop shared by the fused-vmap and
+        device-sharded backends — they differ only in the server mode,
+        the round callable and the batch placement, so the Eq. 7/8
+        bookkeeping lives exactly once.
+
+        Per-node virtual durations are an equal share of the measured
+        round wall scaled by the node speed factors — the heterogeneity
+        emulation the sequential loop derived from per-node measurement.
+        """
         losses, accs = [], []
         clock, sync_wait = 0.0, 0.0
         for r in range(rounds):
             stacked_w, _ = server.pull_all_stacked()
             t0 = time.perf_counter()
             batches = self.dataset.stacked_round_batches(
-                self.batch_size, self.tc.local_steps, self.rng)
-            stacked_w, stacked_opt, node_losses = self._fused_round(
+                self.batch_size, self.tc.local_steps, self.rng,
+                uneven=self.tc.uneven_batches)
+            if batch_sharding is not None:
+                batches = jax.device_put(batches, batch_sharding)
+            stacked_w, stacked_opt, node_losses = round_fn(
                 stacked_w, stacked_opt, batches, jnp.asarray(r, jnp.int32))
             node_losses = np.asarray(jax.block_until_ready(node_losses))
             wall = time.perf_counter() - t0
@@ -271,13 +377,16 @@ class BPTTrainer:
                 accs.append((clock, self._eval(server.global_weights)))
         return TrainReport("sgwu", rounds, losses, accs, clock, sync_wait,
                            server.comm_bytes, self.dataset.totals,
-                           server.global_weights)
+                           server.global_weights, backend=backend)
 
     def _train_sgwu_sequential(self, rounds: int) -> TrainReport:
         """Legacy emulation: one jitted step per node per local step.
 
         Kept as the reference the fused path is regression-tested against
         (and the baseline ``benchmarks/outer_loop.py`` measures)."""
+        if self.tc.uneven_batches:
+            raise ValueError(
+                "uneven_batches needs the fused or device outer path")
         server = ParameterServer(self.params0, self.m)
         opt_states = [self.opt.init(self.params0) for _ in range(self.m)]
         losses, accs = [], []
@@ -302,21 +411,38 @@ class BPTTrainer:
                 accs.append((clock, self._eval(server.global_weights)))
         return TrainReport("sgwu", rounds, losses, accs, clock, sync_wait,
                            server.comm_bytes, self.dataset.totals,
-                           server.global_weights)
+                           server.global_weights, backend="sequential")
 
     # ------------------------------ AGWU -------------------------------
     def _train_agwu(self, rounds: int) -> TrainReport:
+        """AGWU keeps its event-ordered heap (the ordering IS the
+        algorithm).  With ``device_outer`` and enough devices, each node's
+        weights/opt-state live on its own device; a push computes the
+        Eq. 10 delta W_j(k) - W(k) on the node's device and ships ONLY
+        the delta to the server (``push_agwu_delta``)."""
         server = ParameterServer(self.params0, self.m)
-        server.warmup_agwu()     # compile the donated Eq. 10 push up front
+        devices = jax.devices()
+        device_nodes = self.tc.device_outer and len(devices) >= self.m
+        if not device_nodes:
+            server.warmup_agwu()   # compile the donated Eq. 10 push up front
         opt_states = [self.opt.init(self.params0) for _ in range(self.m)]
         losses, accs = [], []
         heap: list[tuple[float, int, int]] = []     # (vtime, node, round)
-        local, rounds_done = {}, np.zeros(self.m, np.int64)
+        local, base_local = {}, {}
+        rounds_done = np.zeros(self.m, np.int64)
         node_durs = np.ones(self.m)
 
-        for j in range(self.m):
+        def pull_to_node(j: int):
             w, _ = server.pull(j)
-            local[j] = w
+            if device_nodes:
+                w = jax.device_put(w, devices[j])
+                base_local[j] = w          # W(k) snapshot, node-resident
+            return w
+
+        for j in range(self.m):
+            if device_nodes:
+                opt_states[j] = jax.device_put(opt_states[j], devices[j])
+            local[j] = pull_to_node(j)
             heapq.heappush(heap, (0.0, j, 0))
 
         clock = 0.0
@@ -327,8 +453,14 @@ class BPTTrainer:
             node_durs[j] = dur
             clock = vt + dur
             q = self._eval(w2) if self.eval_fn else 1.0
-            server.push_agwu(j, w2, self._q_effective(q), virtual_time=clock,
-                             donate=True)     # w2 is dead after the push
+            if device_nodes:
+                delta = tree_sub(w2, base_local[j])   # on node j's device
+                server.push_agwu_delta(j, delta, self._q_effective(q),
+                                       virtual_time=clock)
+            else:
+                server.push_agwu(j, w2, self._q_effective(q),
+                                 virtual_time=clock,
+                                 donate=True)  # w2 is dead after the push
             losses.append(loss)
             rounds_done[j] += 1
             if int(rounds_done.min()) >= self.dataset.part.current_batch:
@@ -337,9 +469,9 @@ class BPTTrainer:
             if self.eval_fn and len(losses) % self.m == 0:
                 accs.append((clock, self._eval(server.global_weights)))
             if rounds_done[j] < rounds:
-                w, _ = server.pull(j)
-                local[j] = w
+                local[j] = pull_to_node(j)
                 heapq.heappush(heap, (clock, j, int(rounds_done[j])))
         return TrainReport("agwu", int(rounds_done.sum()), losses, accs,
                            clock, 0.0, server.comm_bytes,
-                           self.dataset.totals, server.global_weights)
+                           self.dataset.totals, server.global_weights,
+                           backend="heap-device" if device_nodes else "heap")

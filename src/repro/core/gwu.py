@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["sgwu_merge", "sgwu_merge_stacked", "sgwu_merge_and_rebroadcast",
-           "broadcast_tree", "agwu_gamma", "agwu_update", "tree_sub",
+           "sgwu_merge_and_rebroadcast_sharded", "broadcast_tree",
+           "agwu_gamma", "agwu_update", "agwu_update_delta", "tree_sub",
            "tree_add_scaled"]
 
 
@@ -92,6 +93,58 @@ def sgwu_merge_and_rebroadcast(stacked, accuracies):
                                   _merge_weights(accuracies, num_nodes))
 
 
+# ----------------------------------------------------------------------
+# Device-sharded Eq. (7): the node axis lives on a real mesh axis and the
+# merge is a weighted all-reduce — no device gathers the m-stack.
+# ----------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _sharded_merge_fn(mesh):
+    """Per-mesh jitted shard_map merge: each device holds its node block
+    of the stack, contributes w_j * W_j to a psum over the ``nodes`` axis,
+    and writes the merged result back into its (donated) block — the
+    rebroadcast IS the all-reduce output, so the global weights never
+    funnel through a single device."""
+    from jax.experimental.shard_map import shard_map
+    P = jax.sharding.PartitionSpec
+
+    def body(stacked, weights):
+        idx = jax.lax.axis_index("nodes")
+
+        def merge_leaf(x):
+            k = x.shape[0]                    # node block size (m / devices)
+            w = jax.lax.dynamic_slice_in_dim(weights, idx * k, k)
+            w = w.reshape((k,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+            return jax.lax.psum(jnp.sum(x * w, axis=0), "nodes")
+
+        merged = jax.tree_util.tree_map(merge_leaf, stacked)
+        new_stacked = jax.tree_util.tree_map(
+            lambda mg, s: jnp.broadcast_to(mg[None], s.shape), merged,
+            stacked)
+        return merged, new_stacked
+
+    sm = shard_map(body, mesh=mesh, in_specs=(P("nodes"), P()),
+                   out_specs=(P(), P("nodes")))
+    return jax.jit(sm, donate_argnums=(0,))
+
+
+def sgwu_merge_and_rebroadcast_sharded(stacked, accuracies, mesh):
+    """Eq. (7) as an on-device weighted all-reduce over a ``nodes`` mesh.
+
+    ``stacked`` is the node-stacked pytree placed with
+    ``NamedSharding(mesh, P("nodes"))`` (node j's weights resident on
+    device j); its buffers are DONATED.  Returns ``(merged, new_stacked)``
+    where ``merged`` is replicated across the mesh (never pulled to host)
+    and ``new_stacked`` is the next round's sharded replica stack.
+    """
+    num_nodes = _validate_stack(stacked, accuracies)
+    if num_nodes % mesh.shape["nodes"] != 0:
+        raise ValueError(
+            f"{num_nodes} nodes do not divide the `nodes` mesh axis "
+            f"({mesh.shape['nodes']})")
+    return _sharded_merge_fn(mesh)(stacked,
+                                   _merge_weights(accuracies, num_nodes))
+
+
 def sgwu_merge(local_weights: Sequence, accuracies: Sequence[float]):
     """Eq. (7): W(i) = sum_j W_j(i-1) * Q_j / sum_k Q_k.
 
@@ -149,6 +202,24 @@ _agwu_apply = jax.jit(_agwu_apply_impl)
 # their buffers are reused for the new global weights.  global/base are NOT
 # donated — right after a pull they alias each other.
 _agwu_apply_donated = jax.jit(_agwu_apply_impl, donate_argnums=(1,))
+
+
+@jax.jit
+def _agwu_apply_delta(global_w, delta, scale):
+    return jax.tree_util.tree_map(lambda g, d: g + scale * d,
+                                  global_w, delta)
+
+
+def agwu_update_delta(global_weights, delta, gamma: float, accuracy: float):
+    """Eq. (10) from a precomputed node-resident delta W_j(k) - W(k).
+
+    The device-sharded outer layer computes ``delta`` on the submitting
+    node's device and ships ONLY the delta to the server device — the
+    same float ops (and therefore bit-identical results) as
+    ``agwu_update``, split at the subtraction.
+    """
+    scale = jnp.asarray(gamma * accuracy, dtype=jnp.float32)
+    return _agwu_apply_delta(global_weights, delta, scale)
 
 
 def agwu_update(global_weights, local_weights, base_weights,

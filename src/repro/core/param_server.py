@@ -14,8 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gwu import (agwu_gamma, agwu_update, broadcast_tree, sgwu_merge,
-                  sgwu_merge_and_rebroadcast)
+from .gwu import (agwu_gamma, agwu_update, agwu_update_delta, broadcast_tree,
+                  sgwu_merge, sgwu_merge_and_rebroadcast,
+                  sgwu_merge_and_rebroadcast_sharded)
 
 __all__ = ["ParameterServer", "Submission"]
 
@@ -36,7 +37,23 @@ class Submission:
 class ParameterServer:
     """Global weight store with SGWU and AGWU update paths."""
 
-    def __init__(self, init_weights, num_workers: int):
+    def __init__(self, init_weights, num_workers: int, mesh=None):
+        # ``mesh`` switches on DEVICE-RESIDENT mode: the node-stacked
+        # replica tree is placed with NamedSharding over the mesh's
+        # `nodes` axis (node j's weights on device j), the SGWU merge is
+        # an on-device weighted all-reduce, and the merged global weights
+        # stay replicated across the mesh — versions and comm-bytes are
+        # tracked host-side without ever pulling the payload to host.
+        self.mesh = mesh
+        if mesh is not None:
+            if "nodes" not in mesh.axis_names:
+                raise ValueError("device-resident mode needs a `nodes` axis")
+            if num_workers % mesh.shape["nodes"] != 0:
+                raise ValueError(
+                    f"{num_workers} workers do not divide the `nodes` "
+                    f"axis ({mesh.shape['nodes']})")
+            self._node_sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("nodes"))
         self.global_weights = init_weights
         self.version = 0
         self.num_workers = num_workers
@@ -79,6 +96,8 @@ class ParameterServer:
         else:
             self._stacked = None
             stacked = broadcast_tree(self.global_weights, self.num_workers)
+            if self.mesh is not None:     # place node j's replica on device j
+                stacked = jax.device_put(stacked, self._node_sharding)
         for j in range(self.num_workers):
             self._base[j] = self.global_weights
             self._base_version[j] = self.version
@@ -124,6 +143,35 @@ class ParameterServer:
         self.update_log.append(Submission(worker, k, accuracy, virtual_time))
         return gamma
 
+    def push_agwu_delta(self, worker: int, delta, accuracy: float,
+                        virtual_time: float = 0.0):
+        """AGWU push of a node-resident delta W_j(k) - W(k) (1 transfer in).
+
+        The device-sharded outer layer computes the delta on the
+        submitting node's device; the push ships ONLY the delta payload
+        to the server's device and applies Eq. (10) there — the same math
+        as ``push_agwu`` split at the subtraction, with identical
+        version/comm-bytes bookkeeping (the delta payload is one
+        weight-set transfer, exactly like the full-weights push).
+        """
+        if worker not in self._base:
+            raise RuntimeError(f"worker {worker} never pulled weights")
+        k = self._base_version[worker]
+        gamma = agwu_gamma(k, max(self.version, 1),
+                           self.outstanding_versions(exclude=worker))
+        leaves = jax.tree_util.tree_leaves(self.global_weights)
+        if leaves and isinstance(leaves[0], jax.Array):
+            # the physical push: move the delta to the server placement
+            delta = jax.device_put(delta, leaves[0].sharding)
+        self._stacked = None    # any AGWU push stales the replica cache
+        self.global_weights = agwu_update_delta(
+            self.global_weights, delta, gamma, accuracy)
+        self.version += 1
+        self.num_updates += 1
+        self.comm_bytes += self.weight_bytes
+        self.update_log.append(Submission(worker, k, accuracy, virtual_time))
+        return gamma
+
     def push_sgwu(self, submissions: list[tuple[int, Any, float]],
                   virtual_time: float = 0.0):
         """SGWU: barrier-merge all workers' weights with Eq. (7)."""
@@ -158,8 +206,14 @@ class ParameterServer:
             self.comm_bytes += self.weight_bytes
             self.update_log.append(
                 Submission(worker, self.version, float(q), virtual_time))
-        self.global_weights, self._stacked = sgwu_merge_and_rebroadcast(
-            stacked_weights, accuracies)
+        if self.mesh is not None:
+            # on-device weighted all-reduce; merged stays mesh-replicated
+            self.global_weights, self._stacked = \
+                sgwu_merge_and_rebroadcast_sharded(
+                    stacked_weights, accuracies, self.mesh)
+        else:
+            self.global_weights, self._stacked = sgwu_merge_and_rebroadcast(
+                stacked_weights, accuracies)
         self.version += 1
         self.num_updates += 1
         self._stacked_version = self.version

@@ -149,3 +149,22 @@ class TrainConfig:
     # compare the two.  AGWU is unaffected (its event order IS the
     # algorithm).
     fused_outer: bool = True
+    # --- device-sharded outer layer ---
+    # Place the node axis on a real device mesh (launch/mesh.py `nodes`
+    # family): each computing node's params/opt-state/batches live on its
+    # own device, the nodes x local_steps grid runs under shard_map, and
+    # the SGWU merge is an on-device weighted all-reduce (psum).  Falls
+    # back transparently to the fused vmap emulation when fewer than
+    # ``outer_nodes`` devices exist.  AGWU places each node's weights on
+    # its device and pushes device-resident deltas.
+    device_outer: bool = False
+    # Named mesh from launch.mesh.MESHES to place the node axis on ("" =
+    # auto 1-D `nodes` mesh over the first ``outer_nodes`` devices).  The
+    # mesh must expose a `nodes` axis of size ``outer_nodes``.
+    mesh_name: str = ""
+    # IDPA heterogeneity in the round data: per-node effective batch sizes
+    # proportional to the current allocation, realized as padded+masked
+    # stripes so slow nodes/devices carry smaller effective loads while
+    # every stripe keeps the static (B, ...) shape the fused/sharded round
+    # needs.  The loss_fn must honour an optional batch["mask"].
+    uneven_batches: bool = False

@@ -97,8 +97,21 @@ class IDPADataset:
     def num_nodes(self) -> int:
         return self.part.num_nodes
 
+    def node_round_batch_sizes(self, batch_size: int) -> np.ndarray:
+        """Per-node effective batch sizes ∝ the current IDPA allocation.
+
+        The fastest node (largest stripe) trains on the full
+        ``batch_size``; slower nodes get proportionally smaller effective
+        loads — the heterogeneity-aware workload the partitioner encodes,
+        carried into each round's compute.
+        """
+        totals = np.maximum(self.totals, 1).astype(np.float64)
+        sizes = np.ceil(batch_size * totals / totals.max()).astype(np.int64)
+        return np.clip(sizes, 1, batch_size)
+
     def stacked_round_batches(self, batch_size: int, local_steps: int,
-                              rng: np.random.Generator):
+                              rng: np.random.Generator, *,
+                              uneven: bool = False):
         """One SGWU round's data for ALL nodes: ``(m, local_steps, B, ...)``.
 
         Draws node-by-node, step-by-step — the exact RNG consumption
@@ -107,11 +120,33 @@ class IDPADataset:
         numerically equivalent to the legacy path on a fixed seed.  The
         index stripes are built once for the round (the allocation only
         changes between rounds, via ``report_durations``).
+
+        With ``uneven=True`` each node draws only its
+        ``node_round_batch_sizes`` share and the stripe is padded back to
+        ``batch_size`` (cycling the drawn samples) with a float ``mask``
+        leaf of shape ``(m, local_steps, B)`` marking the real rows — the
+        static-shape realization of IDPA's per-node loads that the
+        fused/device-sharded round needs (the loss must honour
+        ``batch["mask"]``).
         """
+        m = self.num_nodes
         views = self.node_views()
-        sels = [[self._select(views[j], j, batch_size, rng)
-                 for _ in range(local_steps)]
-                for j in range(self.num_nodes)]
-        return {k: np.stack([np.stack([v[sel] for sel in node])
-                             for node in sels])
-                for k, v in self.arrays.items()}
+        sizes = self.node_round_batch_sizes(batch_size) if uneven \
+            else np.full(m, batch_size, np.int64)
+        mask = np.zeros((m, local_steps, batch_size), np.float32)
+        sels = []
+        for j in range(m):
+            node = []
+            for s in range(local_steps):
+                sel = self._select(views[j], j, int(sizes[j]), rng)
+                if len(sel) < batch_size:      # pad by cycling; masked out
+                    sel = np.resize(sel, batch_size)
+                node.append(sel)
+                mask[j, s, :sizes[j]] = 1.0
+            sels.append(node)
+        out = {k: np.stack([np.stack([v[sel] for sel in node])
+                            for node in sels])
+               for k, v in self.arrays.items()}
+        if uneven:
+            out["mask"] = mask
+        return out

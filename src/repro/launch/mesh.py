@@ -10,7 +10,8 @@ import math
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "data_axes", "MESHES"]
+__all__ = ["make_production_mesh", "make_mesh", "make_nodes_mesh",
+           "data_axes", "MESHES"]
 
 MESHES = {
     "pod": ((16, 16), ("data", "model")),               # 256 chips (v5e pod)
@@ -18,6 +19,12 @@ MESHES = {
     # reduced meshes for in-test dry-runs (subprocess with 8/16 devices)
     "tiny": ((2, 2), ("data", "model")),
     "tiny3d": ((2, 2, 2), ("pod", "data", "model")),
+    # `nodes` family: 1-D meshes for the device-sharded BPT outer layer —
+    # one device per computing node (the paper's m physical nodes).
+    "nodes2": ((2,), ("nodes",)),
+    "nodes4": ((4,), ("nodes",)),
+    "nodes8": ((8,), ("nodes",)),
+    "nodes16": ((16,), ("nodes",)),
 }
 
 
@@ -32,6 +39,27 @@ def make_mesh(name: str):
             "before any jax import)")
     import numpy as np
     return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_nodes_mesh(num_nodes: int):
+    """1-D ``nodes`` mesh for the device-sharded outer layer.
+
+    One device per computing node, any node count — the named ``nodes<m>``
+    MESHES entries are the documented members of the family; this builds
+    the same shape for arbitrary m.  Raises RuntimeError when the backend
+    has fewer than ``num_nodes`` devices (callers fall back to the
+    vmapped single-device emulation).
+    """
+    if num_nodes < 1:
+        raise ValueError("need at least one node")
+    devices = jax.devices()
+    if len(devices) < num_nodes:
+        raise RuntimeError(
+            f"nodes mesh needs {num_nodes} devices, have {len(devices)} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count to "
+            "emulate a multi-device host)")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices[:num_nodes]), ("nodes",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

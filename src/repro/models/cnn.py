@@ -105,11 +105,22 @@ def cnn_forward(params, images, cfg: CNNConfig):
 
 
 def cnn_loss(params, batch, cfg: CNNConfig):
-    """Paper's Eq. 16: squared error over output neurons (one-hot labels)."""
+    """Paper's Eq. 16: squared error over output neurons (one-hot labels).
+
+    An optional ``batch["mask"]`` (B,) of 0/1 weights drops padded rows —
+    the uneven per-node stripes of
+    ``IDPADataset.stacked_round_batches(uneven=True)`` — by switching the
+    batch mean to a masked mean over the real samples.
+    """
     logits = cnn_forward(params, batch["images"], cfg)
     y = jax.nn.one_hot(batch["labels"], cfg.num_classes, dtype=logits.dtype)
     probs = jax.nn.softmax(logits, axis=-1)
-    return jnp.mean(jnp.sum((y - probs) ** 2, axis=-1))
+    per_example = jnp.sum((y - probs) ** 2, axis=-1)
+    mask = batch.get("mask")
+    if mask is None:
+        return jnp.mean(per_example)
+    mask = mask.astype(per_example.dtype)
+    return jnp.sum(per_example * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
 
 def cnn_accuracy(params, batch, cfg: CNNConfig):

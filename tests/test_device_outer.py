@@ -1,0 +1,344 @@
+"""Device-sharded outer layer equivalence suite.
+
+The `device_outer` path places the node axis on a real `nodes` mesh
+(shard_map round, psum merge, device-resident ParameterServer) and must
+reproduce the fused-vmap emulation's loss trajectory and merged weights.
+Multi-device cases need forced host devices — the CI ``multidevice`` job
+runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+— and skip on single-device runs; the fallback and delta-push tests run
+anywhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bpt_trainer import BPTTrainer
+from repro.core.gwu import (sgwu_merge_and_rebroadcast_sharded,
+                            sgwu_merge_stacked, tree_sub)
+from repro.core.param_server import ParameterServer
+from repro.core.types import TrainConfig
+from repro.data.pipeline import IDPADataset
+from repro.data.synthetic import image_dataset
+from repro.launch.mesh import MESHES, make_nodes_mesh
+from repro.models.cnn import CNNConfig, cnn_loss, init_cnn
+
+NDEV = len(jax.devices())
+
+
+def need_devices(m):
+    return pytest.mark.skipif(
+        NDEV < m, reason=f"needs {m} devices (have {NDEV}); run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _run_sgwu(m: int, *, device: bool, uneven: bool = False, rounds: int = 3,
+              hetero: bool = False):
+    """One SGWU run on a fixed seed; batches=1 freezes the IDPA allocation
+    so both paths see identical data regardless of wall time.  ``hetero``
+    gives the nodes a frequency gradient, so the frozen first-batch
+    allocation (Eq. 2) — and with it the uneven stripe sizes — differ."""
+    cfg = CNNConfig(name="equiv", image_size=8, conv_layers=1, filters=4,
+                    fc_layers=1, fc_neurons=32)
+    xs, ys = image_dataset(64 * m * 2, size=8, seed=0)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    freqs = np.linspace(1.0, 2.0, m) if hetero else None
+    ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=m, batches=1,
+                     frequencies=freqs)
+    tc = TrainConfig(outer_strategy="sgwu", outer_nodes=m,
+                     optimizer="adamw", learning_rate=2e-3,
+                     total_steps=100, warmup_steps=5, local_steps=2,
+                     seed=0, device_outer=device, uneven_batches=uneven)
+    tr = BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds, tc,
+                    batch_size=32)
+    return tr.train(rounds=rounds)
+
+
+def _assert_reports_close(dev, ref, rtol=1e-5, atol=1e-6):
+    np.testing.assert_allclose(dev.losses, ref.losses, rtol=rtol, atol=atol)
+    for a, b in zip(jax.tree_util.tree_leaves(dev.final_params),
+                    jax.tree_util.tree_leaves(ref.final_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol)
+
+
+class TestDeviceVmapEquivalence:
+    """device-sharded SGWU ≡ fused vmap (the PR's correctness bar)."""
+
+    @need_devices(2)
+    @pytest.mark.parametrize("uneven", [False, True])
+    def test_m2(self, uneven):
+        dev = _run_sgwu(2, device=True, uneven=uneven, hetero=uneven)
+        ref = _run_sgwu(2, device=False, uneven=uneven, hetero=uneven)
+        assert dev.backend == "device" and ref.backend == "vmap"
+        _assert_reports_close(dev, ref)
+
+    @need_devices(8)
+    @pytest.mark.parametrize("uneven", [False, True])
+    def test_m8(self, uneven):
+        """The acceptance bar: ≥3 rounds at m=8 within 1e-5."""
+        dev = _run_sgwu(8, device=True, uneven=uneven, hetero=uneven,
+                        rounds=4)
+        ref = _run_sgwu(8, device=False, uneven=uneven, hetero=uneven,
+                        rounds=4)
+        assert dev.backend == "device" and ref.backend == "vmap"
+        _assert_reports_close(dev, ref)
+
+    @need_devices(2)
+    def test_comm_bytes_accounting_unchanged(self):
+        dev = _run_sgwu(2, device=True)
+        ref = _run_sgwu(2, device=False)
+        assert dev.comm_bytes == ref.comm_bytes
+
+    @need_devices(2)
+    def test_global_weights_stay_device_resident(self):
+        """The merged weights never funnel to host: they come back as ONE
+        jax.Array replicated across every mesh device."""
+        dev = _run_sgwu(2, device=True)
+        for leaf in jax.tree_util.tree_leaves(dev.final_params):
+            assert isinstance(leaf, jax.Array)
+            assert leaf.sharding.is_fully_replicated
+            assert len(leaf.sharding.device_set) == 2
+
+
+class TestFallback:
+    def test_too_few_devices_falls_back_to_vmap(self):
+        m = 2 * NDEV          # always more nodes than devices
+        rep = _run_sgwu(m, device=True, rounds=2)
+        assert rep.backend == "vmap"
+        ref = _run_sgwu(m, device=False, rounds=2)
+        _assert_reports_close(rep, ref)
+
+    def test_bad_mesh_name_raises(self):
+        cfg = CNNConfig(name="t", image_size=8, conv_layers=1, filters=4,
+                        fc_layers=1, fc_neurons=16)
+        xs, ys = image_dataset(128, size=8, seed=0)
+        ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=2,
+                         batches=1)
+        tc = TrainConfig(outer_strategy="sgwu", outer_nodes=2,
+                         device_outer=True, mesh_name="tiny")
+        tr = BPTTrainer(
+            lambda p, b: (cnn_loss(p, b, cfg), {}),
+            init_cnn(jax.random.PRNGKey(0), cfg), ds, tc, batch_size=8)
+        if NDEV >= 4:         # mesh builds, then fails the axis check
+            with pytest.raises(ValueError, match="nodes"):
+                tr.train(rounds=1)
+        else:                 # too few devices: transparent fallback first
+            assert tr.train(rounds=1).backend == "vmap"
+
+
+class TestShardedMerge:
+    """gwu.sgwu_merge_and_rebroadcast_sharded ≡ host-side Eq. 7 merge."""
+
+    def _stacked(self, m, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        return {"w": jax.random.normal(ks[0], (m, 4, 3)),
+                "b": {"x": jax.random.normal(ks[1], (m, 5)),
+                      "s": jax.random.normal(ks[2], (m,))}}
+
+    @need_devices(2)
+    @pytest.mark.parametrize("m", [2, 8])
+    def test_matches_host_merge(self, m):
+        if NDEV < m:
+            pytest.skip(f"needs {m} devices")
+        mesh = make_nodes_mesh(m)
+        sharding = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("nodes"))
+        qs = list(np.linspace(0.2, 1.0, m))
+        want = sgwu_merge_stacked(self._stacked(m), qs)
+        stacked = jax.device_put(self._stacked(m), sharding)
+        merged, new_stacked = sgwu_merge_and_rebroadcast_sharded(
+            stacked, qs, mesh)
+        for a, b in zip(jax.tree_util.tree_leaves(merged),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+        # the rebroadcast stack holds m replicas of the merged tree
+        for leaf, mg in zip(jax.tree_util.tree_leaves(new_stacked),
+                            jax.tree_util.tree_leaves(merged)):
+            np.testing.assert_allclose(
+                np.asarray(leaf),
+                np.broadcast_to(np.asarray(mg)[None], leaf.shape),
+                rtol=1e-6)
+
+    @need_devices(2)
+    def test_server_device_mode_matches_host_mode(self):
+        mesh = make_nodes_mesh(2)
+        qs = [0.3, 0.7]
+        host = ParameterServer(self._stacked(1)["b"], num_workers=2)
+        dev = ParameterServer(self._stacked(1)["b"], num_workers=2,
+                              mesh=mesh)
+        for ps in (host, dev):
+            ps.pull_all_stacked()
+        def sub():     # fresh each time: both pushes DONATE their stack
+            return jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                self._stacked(1, seed=1)["b"], self._stacked(1, seed=2)["b"])
+        host.push_sgwu_stacked(sub(), qs)
+        dev.push_sgwu_stacked(
+            jax.device_put(sub(), jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("nodes"))), qs)
+        for a, b in zip(jax.tree_util.tree_leaves(host.global_weights),
+                        jax.tree_util.tree_leaves(dev.global_weights)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+        assert host.comm_bytes == dev.comm_bytes
+        assert host.version == dev.version
+        # pull after push hands out the sharded replica cache, advanced
+        again, version = dev.pull_all_stacked()
+        assert version == 1
+        for leaf, mg in zip(jax.tree_util.tree_leaves(again),
+                            jax.tree_util.tree_leaves(dev.global_weights)):
+            np.testing.assert_allclose(
+                np.asarray(leaf),
+                np.broadcast_to(np.asarray(mg)[None], leaf.shape),
+                rtol=1e-6)
+
+
+class TestAgwuDeviceDeltas:
+    def _tree(self, v):
+        return {"a": jnp.full((3, 2), v, jnp.float32),
+                "b": jnp.full((4,), 2 * v, jnp.float32)}
+
+    def test_delta_push_matches_full_push(self):
+        """push_agwu_delta(W_j - W(k)) ≡ push_agwu(W_j): same math split
+        at the subtraction, same bookkeeping."""
+        full = ParameterServer(self._tree(0.5), num_workers=2)
+        delta = ParameterServer(self._tree(0.5), num_workers=2)
+        for ps in (full, delta):
+            for j in range(2):
+                ps.pull(j)
+        dev = jax.devices()[-1]       # node-resident on the LAST device
+        local = jax.device_put(self._tree(1.5), dev)
+        base = jax.device_put(self._tree(0.5), dev)
+        full.push_agwu(0, self._tree(1.5), 0.7, virtual_time=1.0)
+        delta.push_agwu_delta(0, tree_sub(local, base), 0.7,
+                              virtual_time=1.0)
+        for a, b in zip(jax.tree_util.tree_leaves(full.global_weights),
+                        jax.tree_util.tree_leaves(delta.global_weights)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+        assert full.comm_bytes == delta.comm_bytes
+        assert full.version == delta.version
+        assert [s.base_version for s in full.update_log] == \
+            [s.base_version for s in delta.update_log]
+
+    def test_delta_push_never_pulled(self):
+        ps = ParameterServer(self._tree(0.0), num_workers=1)
+        with pytest.raises(RuntimeError, match="never pulled"):
+            ps.push_agwu_delta(0, self._tree(0.1), 1.0)
+
+    @need_devices(2)
+    def test_agwu_trainer_device_mode_runs(self):
+        cfg = CNNConfig(name="t", image_size=8, conv_layers=1, filters=4,
+                        fc_layers=1, fc_neurons=32)
+        xs, ys = image_dataset(256, size=8, seed=0)
+        ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=2,
+                         batches=1)
+        tc = TrainConfig(outer_strategy="agwu", outer_nodes=2,
+                         optimizer="adamw", learning_rate=2e-3,
+                         total_steps=100, warmup_steps=5, local_steps=1,
+                         seed=0, device_outer=True)
+        tr = BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}),
+                        init_cnn(jax.random.PRNGKey(0), cfg), ds, tc,
+                        batch_size=16)
+        rep = tr.train(rounds=2)
+        assert rep.backend == "heap-device"
+        assert np.isfinite(rep.losses).all()
+        assert rep.comm_bytes > 0
+
+
+class TestUnevenBatches:
+    def _ds(self, m=4, n=512, hetero=True):
+        xs, ys = image_dataset(n, size=8, seed=3)
+        freqs = np.linspace(1.0, 2.0, m) if hetero else None
+        return IDPADataset({"images": xs, "labels": ys}, num_nodes=m,
+                           batches=1, frequencies=freqs)
+
+    def test_sizes_proportional_to_allocation(self):
+        ds = self._ds()
+        sizes = ds.node_round_batch_sizes(32)
+        totals = ds.totals
+        assert sizes[np.argmax(totals)] == 32        # fastest: full batch
+        assert (sizes >= 1).all() and (sizes <= 32).all()
+        order = np.argsort(totals)
+        assert (np.diff(sizes[order]) >= 0).all()    # monotone in stripe
+
+    def test_mask_shape_and_padding(self):
+        ds = self._ds()
+        out = ds.stacked_round_batches(32, 2, np.random.default_rng(0),
+                                       uneven=True)
+        assert out["mask"].shape == (4, 2, 32)
+        sizes = ds.node_round_batch_sizes(32)
+        for j in range(4):
+            for s in range(2):
+                assert out["mask"][j, s].sum() == sizes[j]
+                # padded region cycles the real samples of the stripe
+                assert out["images"][j, s].shape == (32, 8, 8, 3)
+
+    def test_uniform_draw_order_unchanged(self):
+        """uneven=False must consume the RNG exactly like before (and like
+        the sequential node_batch loop) and emit NO mask leaf."""
+        ds = self._ds(hetero=False)
+        out = ds.stacked_round_batches(16, 2, np.random.default_rng(7))
+        assert "mask" not in out
+        rng = np.random.default_rng(7)
+        for j in range(4):
+            for s in range(2):
+                want = ds.node_batch(j, 16, rng)
+                np.testing.assert_array_equal(out["images"][j, s],
+                                              want["images"])
+
+    def test_masked_loss_ignores_padding(self):
+        cfg = CNNConfig(name="t", image_size=8, conv_layers=1, filters=4,
+                        fc_layers=1, fc_neurons=16)
+        params = init_cnn(jax.random.PRNGKey(0), cfg)
+        xs, ys = image_dataset(8, size=8, seed=0)
+        real = {"images": jnp.asarray(xs[:4]), "labels": jnp.asarray(ys[:4])}
+        padded = {"images": jnp.asarray(np.resize(xs[:4], (8, 8, 8, 3))),
+                  "labels": jnp.asarray(np.resize(ys[:4], (8,))),
+                  "mask": jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)}
+        np.testing.assert_allclose(float(cnn_loss(params, padded, cfg)),
+                                   float(cnn_loss(params, real, cfg)),
+                                   rtol=1e-6)
+        ones = dict(real, mask=jnp.ones((4,), jnp.float32))
+        np.testing.assert_allclose(float(cnn_loss(params, ones, cfg)),
+                                   float(cnn_loss(params, real, cfg)),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("tc_kwargs", [
+        dict(outer_strategy="sgwu", fused_outer=False),   # sequential loop
+        dict(outer_strategy="agwu"),                      # per-node heap
+        dict(outer_strategy="sync"),                      # single-node DP
+    ])
+    def test_non_stacked_paths_reject_uneven(self, tc_kwargs):
+        """Only the stacked SGWU rounds realize the masked stripes; every
+        other path must fail loudly rather than silently train uniform."""
+        ds = self._ds(m=2)
+        tc = TrainConfig(outer_nodes=2, uneven_batches=True, **tc_kwargs)
+        cfg = CNNConfig(name="t", image_size=8, conv_layers=1, filters=4,
+                        fc_layers=1, fc_neurons=16)
+        tr = BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}),
+                        init_cnn(jax.random.PRNGKey(0), cfg), ds, tc,
+                        batch_size=8)
+        with pytest.raises(ValueError, match="uneven"):
+            tr.train(rounds=1)
+
+
+class TestNodesMeshFamily:
+    def test_meshes_entries(self):
+        for m in (2, 4, 8, 16):
+            shape, axes = MESHES[f"nodes{m}"]
+            assert shape == (m,) and axes == ("nodes",)
+
+    def test_make_nodes_mesh(self):
+        if NDEV < 2:
+            with pytest.raises(RuntimeError, match="nodes mesh"):
+                make_nodes_mesh(2)
+        else:
+            mesh = make_nodes_mesh(2)
+            assert mesh.shape == {"nodes": 2}
+
+    def test_bad_count(self):
+        with pytest.raises(ValueError):
+            make_nodes_mesh(0)
