@@ -6,7 +6,8 @@ server, then compares against the synchronous SGWU strategy — reproducing
 the headline claim (accuracy parity, zero synchronisation wait) at demo
 scale.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python examples/quickstart.py
+(`pip install -e .` first; bare checkouts can prefix `PYTHONPATH=src`.)
 """
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,8 @@ sustains: Table-2 "case2" topology at 32px with a widened FC stack
 (~100M params), 4 virtual heterogeneous nodes, a few hundred optimizer
 steps.  Reports the accuracy trace, sync-wait and communication volume.
 
-Run:  PYTHONPATH=src python examples/train_bpt_cnn.py [--steps 200]
+Run:  python examples/train_bpt_cnn.py [--steps 200]
+(`pip install -e .` first; bare checkouts can prefix `PYTHONPATH=src`.)
 """
 import argparse
 import time
@@ -15,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bpt_trainer import BPTTrainer
+from repro.core.bpt_trainer import BPTTrainer, TrainHooks
+from repro.core.engine import ENGINES, engine_config
 from repro.core.types import TrainConfig
 from repro.data.pipeline import IDPADataset
 from repro.data.synthetic import image_dataset
@@ -32,6 +34,10 @@ def main(argv=None):
     ap.add_argument("--fc-neurons", type=int, default=2000,
                     help="2000 -> ~100M params (paper case5-7 FC scale)")
     ap.add_argument("--strategy", choices=("sgwu", "agwu"), default="agwu")
+    ap.add_argument("--engine", choices=sorted(ENGINES), default="",
+                    help="select the outer-layer execution engine by name "
+                    "(overrides --strategy/--device-outer; see "
+                    "repro.core.engine.ENGINES)")
     ap.add_argument("--device-outer", action="store_true",
                     help="shard the node axis over a real `nodes` device "
                     "mesh (needs >= --nodes devices, e.g. XLA_FLAGS="
@@ -65,20 +71,28 @@ def main(argv=None):
     ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=args.nodes,
                      batches=min(3, rounds), frequencies=1.0 / speeds,
                      idpa_mode="balanced")
-    tc = TrainConfig(outer_strategy=args.strategy, outer_nodes=args.nodes,
-                     optimizer="adamw", learning_rate=1e-3,
-                     warmup_steps=10, total_steps=args.steps,
-                     local_steps=args.local_steps,
-                     device_outer=args.device_outer,
-                     uneven_batches=args.uneven_batches)
+    common = dict(outer_nodes=args.nodes, optimizer="adamw",
+                  learning_rate=1e-3, warmup_steps=10,
+                  total_steps=args.steps, local_steps=args.local_steps,
+                  uneven_batches=args.uneven_batches)
+    if args.engine:     # engine selected by name through the engine API
+        tc = TrainConfig(**engine_config(args.engine, **common))
+    else:
+        tc = TrainConfig(outer_strategy=args.strategy,
+                         device_outer=args.device_outer, **common)
     trainer = BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds,
                          tc, batch_size=32, eval_fn=eval_fn,
                          speed_factors=speeds)
+    hooks = TrainHooks(on_round=lambda ev: print(
+        f"[bpt-cnn]   event {ev.round + 1}: loss={ev.loss:.4f} "
+        f"clock={ev.virtual_clock:.1f}s", flush=True))
     t0 = time.time()
-    rep = trainer.train(rounds=rounds)
+    rep = trainer.train(rounds=rounds, hooks=hooks)
     print(f"[bpt-cnn] {rep.steps} pushes in {time.time()-t0:.0f}s wall "
           f"({rep.strategy}/{rep.backend} outer backend, "
           f"{len(jax.devices())} device(s))")
+    if rep.fallback:
+        print(f"[bpt-cnn] engine fallback: {rep.fallback}")
     print(f"[bpt-cnn] accuracy trace: "
           f"{[(round(t,1), round(a,3)) for t, a in rep.accuracies]}")
     print(f"[bpt-cnn] IDPA allocation (samples/node): {rep.allocation}")
@@ -86,7 +100,7 @@ def main(argv=None):
           f"comm={rep.comm_bytes/2**20:.1f}MB")
     # sanity: beat 10-class chance.  AGWU applies m× more global updates
     # than SGWU in the same --steps budget, so it clears a higher bar.
-    floor = 0.3 if args.strategy == "agwu" else 0.15
+    floor = 0.3 if rep.strategy == "agwu" else 0.15
     assert rep.accuracies[-1][1] > floor, "should beat 10-class chance"
 
 

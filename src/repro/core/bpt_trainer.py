@@ -8,23 +8,25 @@ is emulated with per-node speed factors scaling measured step times into
 virtual completion times — the event order (and therefore the staleness
 pattern AGWU sees) is exactly the paper's.
 
-With ``TrainConfig.fused_outer`` (the default) the SGWU outer layer is a
-single jitted dispatch per round: the m nodes' parameters and optimizer
-states live as node-stacked pytrees (leading axis m) and the whole
-nodes × local_steps grid runs as ``jax.vmap`` over a ``lax.scan`` — host
-dispatch cost is O(1) in m instead of O(m · h), which is precisely the
-outer-layer synchronization cost the paper attacks.  AGWU keeps its
-event-ordered heap (the ordering IS the algorithm) but pushes through a
-pre-jitted, buffer-donating Eq. (10) path.
+The outer layer's execution substrates are pluggable engines
+(``repro.core.engine``): the sync scan baseline, the legacy sequential
+loop, the fused vmap(nodes) x scan(local_steps) dispatch, the
+shard_map round on a real `nodes` device mesh, and the AGWU event heap
+(host-server or node-pinned delta-push variants).
+``engine.resolve_engine`` is the single point that maps a TrainConfig to
+an engine — it owns every flag-combination rule and the transparent
+device-count fallback, which is recorded in the ``EnginePlan`` and
+surfaced on ``TrainReport.fallback``.
 
-With ``TrainConfig.device_outer`` the node axis is additionally placed on
-a real device mesh (``launch/mesh.py`` `nodes` family): the stacked
-pytrees are sharded one node per device, the round runs under
-``shard_map`` (node axis = device axis), and the Eq. 7 merge is an
-on-device weighted all-reduce inside a device-resident ParameterServer —
-the architecture the paper actually describes, with the vmap path as the
-transparent single-device fallback.  AGWU under ``device_outer`` keeps
-each node's weights on its own device and pushes Eq. 10 deltas.
+Two entry points:
+
+- ``run(rounds, hooks)`` — a generator yielding one ``RoundEvent`` per
+  merge (per round for SGWU/sync, per push for AGWU) so callers stream
+  losses, evaluate on their own cadence, checkpoint mid-run and
+  early-stop.  ``TrainHooks`` supplies the eval / checkpoint / callback
+  cadences.
+- ``train(rounds, hooks)`` — drains ``run`` into a ``TrainReport``; the
+  historical API every test and driver keeps using.
 
 Inner layer: the jitted step itself — XLA/Pallas task parallelism
 (DESIGN.md §3) — plus optional activation remat.
@@ -32,24 +34,22 @@ Inner layer: the jitted step itself — XLA/Pallas task parallelism
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpointing import checkpoint
 from repro.data.pipeline import IDPADataset
-from repro.launch.mesh import make_mesh, make_nodes_mesh
 from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
                                     make_optimizer, warmup_cosine)
 
-from .gwu import broadcast_tree, tree_sub
-from .param_server import ParameterServer
+from .engine import RoundEvent, TrainHooks, resolve_engine
 from .types import TrainConfig
 
-__all__ = ["BPTTrainer", "TrainReport"]
+__all__ = ["BPTTrainer", "TrainReport", "TrainHooks", "RoundEvent"]
 
 
 @dataclasses.dataclass
@@ -69,9 +69,12 @@ class TrainReport:
     # (sync baseline).  The device path falls back to "vmap" when the
     # backend has too few devices — callers can assert on this.
     backend: str = ""
+    # non-empty when the executed backend differs from the requested one
+    # (the EnginePlan's recorded device-count fallback reason)
+    fallback: str = ""
 
     def summary(self) -> dict:
-        return {
+        out = {
             "strategy": self.strategy,
             "backend": self.backend,
             "steps": self.steps,
@@ -82,6 +85,9 @@ class TrainReport:
             "sync_wait": round(self.sync_wait, 3),
             "comm_MB": round(self.comm_bytes / 2**20, 2),
         }
+        if self.fallback:
+            out["fallback"] = self.fallback
+        return out
 
 
 class BPTTrainer:
@@ -118,6 +124,7 @@ class BPTTrainer:
         self.accuracy_weighting = accuracy_weighting
         self._q_ema = None
         self._eval_vmapped = None    # lazily-built vmap of eval_fn (fused)
+        self.last_plan = None        # EnginePlan of the most recent run()
 
         grad_clip = train_cfg.grad_clip
 
@@ -215,76 +222,12 @@ class BPTTrainer:
         return [max(self._eval(self._node_slice(stacked, j)), 1e-3)
                 for j in range(self.m)]
 
-    # ------------------------------------------------------------------
-    def train(self, rounds: int) -> TrainReport:
-        if self.tc.outer_strategy == "sgwu":
-            return self._train_sgwu(rounds)
-        if self.tc.uneven_batches:
-            # only the stacked-round SGWU paths realize the padded+masked
-            # stripes; silently training with uniform batches would fake
-            # the heterogeneity the flag promises
-            raise ValueError(
-                "uneven_batches needs outer_strategy='sgwu' (the fused or "
-                f"device outer path), not {self.tc.outer_strategy!r}")
-        if self.tc.outer_strategy == "agwu":
-            return self._train_agwu(rounds)
-        return self._train_sync(rounds)
-
-    # -------------------------- plain sync DP --------------------------
-    def _train_sync(self, rounds: int) -> TrainReport:
-        """Baseline: synchronous data parallelism (one fused scan/round)."""
-        params = self.params0
-        opt_state = self.opt.init(params)
-        losses, accs = [], []
-        clock = 0.0
-        for r in range(rounds):
-            t0 = time.perf_counter()
-            batches = [self.dataset.node_batch(0, self.batch_size, self.rng)
-                       for _ in range(self.tc.local_steps)]
-            stacked = {k: jnp.stack([b[k] for b in batches])
-                       for k in batches[0]}
-            params, opt_state, loss = self._scan_round(
-                params, opt_state, stacked, jnp.asarray(r, jnp.int32))
-            jax.block_until_ready(loss)
-            clock += (time.perf_counter() - t0) * self.speed[0]
-            losses.append(float(loss))
-            if self.eval_fn and (r + 1) % 5 == 0:
-                accs.append((clock, self._eval(params)))
-        return TrainReport("sync", rounds, losses, accs, clock, 0.0, 0,
-                           self.dataset.totals, params, backend="scan")
-
-    # ------------------------------ SGWU -------------------------------
-    def _train_sgwu(self, rounds: int) -> TrainReport:
-        if self.tc.device_outer:
-            mesh = self._nodes_mesh()
-            if mesh is not None:
-                return self._train_sgwu_device(rounds, mesh)
-            # too few devices: fall back transparently to the fused vmap
-        if self.tc.fused_outer or self.tc.device_outer:
-            return self._train_sgwu_fused(rounds)
-        return self._train_sgwu_sequential(rounds)
-
-    def _nodes_mesh(self):
-        """The `nodes` mesh for the device-sharded outer layer, or None
-        when the backend has too few devices (the transparent fallback).
-        A ``mesh_name`` whose `nodes` axis mismatches ``outer_nodes`` is a
-        config bug, not a capacity problem, and raises."""
-        try:
-            mesh = make_mesh(self.tc.mesh_name) if self.tc.mesh_name \
-                else make_nodes_mesh(self.m)
-        except RuntimeError:
-            return None
-        if "nodes" not in mesh.axis_names or mesh.shape["nodes"] != self.m:
-            raise ValueError(
-                f"mesh {self.tc.mesh_name!r} needs a `nodes` axis of size "
-                f"{self.m}, has axes {dict(mesh.shape)}")
-        return mesh
-
     def _get_device_round(self, mesh):
         """shard_map the fused round over the mesh's `nodes` axis: node
         axis = device axis, so each device runs ITS node's scan on ITS
         resident block of the stacked pytrees — no cross-device traffic
-        until the merge all-reduce."""
+        until the merge all-reduce.  Cached per mesh so repeated runs
+        reuse the compiled dispatch."""
         if mesh not in self._device_rounds:
             from jax.experimental.shard_map import shard_map
             P = jax.sharding.PartitionSpec
@@ -302,176 +245,57 @@ class BPTTrainer:
             self._device_rounds[mesh] = jax.jit(sm, donate_argnums=(0, 1))
         return self._device_rounds[mesh]
 
-    def _train_sgwu_device(self, rounds: int, mesh) -> TrainReport:
-        """Device-sharded outer layer: the paper's m physical nodes.
+    # ------------------------------------------------------------------
+    def run(self, rounds: int,
+            hooks: Optional[TrainHooks] = None) -> Iterator[RoundEvent]:
+        """Stream the outer layer: one ``RoundEvent`` per merge.
 
-        Identical round structure to the fused path (the shared
-        ``_run_stacked_rounds`` loop), but the node-stacked pytrees are
-        placed with ``NamedSharding`` over the mesh's `nodes` axis (node
-        j resident on device j), the round runs under ``shard_map``, and
-        the Eq. 7 merge is an on-device weighted all-reduce inside the
-        device-resident ParameterServer — the global weights never
-        funnel through host or a single device.
+        Resolves the execution engine (``engine.resolve_engine``), then
+        yields each merge event — round index, per-node losses, virtual
+        clock, cumulative sync-wait and comm-bytes, and the pull-able
+        post-merge global weights.  Callers evaluate / checkpoint /
+        early-stop at will; breaking out of the iterator stops training.
+
+        ``hooks`` layers cadences on the stream: accuracy evals every
+        ``eval_every`` events (0 keeps the engine's historical default),
+        ``checkpoint_every`` saves ``event.params`` into
+        ``checkpoint_dir`` via ``repro.checkpointing``, and ``on_round``
+        observes every event before it is yielded.
+
+        A generator: config errors raise at the first ``next()``.
         """
-        server = ParameterServer(self.params0, self.m, mesh=mesh)
-        node_sharding = jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec("nodes"))
-        stacked_opt = jax.device_put(
-            broadcast_tree(self.opt.init(self.params0), self.m),
-            node_sharding)
-        return self._run_stacked_rounds(
-            rounds, server, stacked_opt, self._get_device_round(mesh),
-            node_sharding, backend="device")
+        hooks = hooks or TrainHooks()
+        plan = resolve_engine(self.tc)
+        self.last_plan = plan
+        engine = plan.engine_cls(self, plan)
+        eval_every = hooks.eval_every or engine.default_eval_every
+        for ev in engine.events(rounds):
+            n = ev.round + 1
+            if self.eval_fn and n % eval_every == 0:
+                ev.accuracy = self._eval(ev.params)
+            if hooks.checkpoint_every and hooks.checkpoint_dir \
+                    and n % hooks.checkpoint_every == 0:
+                checkpoint.save(hooks.checkpoint_dir, ev.params, step=n)
+            if hooks.on_round:
+                hooks.on_round(ev)
+            yield ev
 
-    def _train_sgwu_fused(self, rounds: int) -> TrainReport:
-        """Fused outer layer: the m nodes' round is ONE jitted dispatch.
-
-        Node-stacked params/opt-states flow ``pull_all_stacked`` →
-        ``_fused_round`` (vmap over nodes, scan over local steps, stacked
-        buffers donated) → ``push_sgwu_stacked`` (jitted Eq. 7 merge on the
-        stack, donated).
-        """
-        server = ParameterServer(self.params0, self.m)
-        stacked_opt = broadcast_tree(self.opt.init(self.params0), self.m)
-        return self._run_stacked_rounds(
-            rounds, server, stacked_opt, self._fused_round, None,
-            backend="vmap")
-
-    def _run_stacked_rounds(self, rounds: int, server: ParameterServer,
-                            stacked_opt, round_fn, batch_sharding,
-                            backend: str) -> TrainReport:
-        """The stacked SGWU round loop shared by the fused-vmap and
-        device-sharded backends — they differ only in the server mode,
-        the round callable and the batch placement, so the Eq. 7/8
-        bookkeeping lives exactly once.
-
-        Per-node virtual durations are an equal share of the measured
-        round wall scaled by the node speed factors — the heterogeneity
-        emulation the sequential loop derived from per-node measurement.
-        """
+    def train(self, rounds: int,
+              hooks: Optional[TrainHooks] = None) -> TrainReport:
+        """Drain ``run`` into a ``TrainReport`` (the historical API)."""
         losses, accs = [], []
-        clock, sync_wait = 0.0, 0.0
-        for r in range(rounds):
-            stacked_w, _ = server.pull_all_stacked()
-            t0 = time.perf_counter()
-            batches = self.dataset.stacked_round_batches(
-                self.batch_size, self.tc.local_steps, self.rng,
-                uneven=self.tc.uneven_batches)
-            if batch_sharding is not None:
-                batches = jax.device_put(batches, batch_sharding)
-            stacked_w, stacked_opt, node_losses = round_fn(
-                stacked_w, stacked_opt, batches, jnp.asarray(r, jnp.int32))
-            node_losses = np.asarray(jax.block_until_ready(node_losses))
-            wall = time.perf_counter() - t0
-            durs = (wall / self.m) * self.speed
-            clock += durs.max()
-            sync_wait += float((durs.max() - durs).sum())      # Eq. (8)
-            if self.eval_fn:
-                qs = self._eval_nodes(stacked_w)
-            else:
-                qs = [1.0] * self.m          # SGWU normalises in Eq. 7
-            server.push_sgwu_stacked(stacked_w, qs, virtual_time=clock)
-            losses.append(float(node_losses.mean()))
-            self.dataset.report_durations(durs)
-            if self.eval_fn:
-                accs.append((clock, self._eval(server.global_weights)))
-        return TrainReport("sgwu", rounds, losses, accs, clock, sync_wait,
-                           server.comm_bytes, self.dataset.totals,
-                           server.global_weights, backend=backend)
-
-    def _train_sgwu_sequential(self, rounds: int) -> TrainReport:
-        """Legacy emulation: one jitted step per node per local step.
-
-        Kept as the reference the fused path is regression-tested against
-        (and the baseline ``benchmarks/outer_loop.py`` measures)."""
-        if self.tc.uneven_batches:
-            raise ValueError(
-                "uneven_batches needs the fused or device outer path")
-        server = ParameterServer(self.params0, self.m)
-        opt_states = [self.opt.init(self.params0) for _ in range(self.m)]
-        losses, accs = [], []
-        clock, sync_wait = 0.0, 0.0
-        for r in range(rounds):
-            subs, durs = [], np.zeros(self.m)
-            node_losses = np.zeros(self.m)
-            for j in range(self.m):
-                w, _ = server.pull(j)
-                w2, opt_states[j], loss, dur = self._local_round(
-                    w, opt_states[j], j, r)
-                q = self._eval(w2) if self.eval_fn else 1.0
-                subs.append((j, w2, max(q, 1e-3)))  # SGWU normalises in Eq. 7
-                durs[j] = dur
-                node_losses[j] = loss
-            clock += durs.max()
-            sync_wait += float((durs.max() - durs).sum())      # Eq. (8)
-            server.push_sgwu(subs, virtual_time=clock)
-            losses.append(float(node_losses.mean()))
-            self.dataset.report_durations(durs)
-            if self.eval_fn:
-                accs.append((clock, self._eval(server.global_weights)))
-        return TrainReport("sgwu", rounds, losses, accs, clock, sync_wait,
-                           server.comm_bytes, self.dataset.totals,
-                           server.global_weights, backend="sequential")
-
-    # ------------------------------ AGWU -------------------------------
-    def _train_agwu(self, rounds: int) -> TrainReport:
-        """AGWU keeps its event-ordered heap (the ordering IS the
-        algorithm).  With ``device_outer`` and enough devices, each node's
-        weights/opt-state live on its own device; a push computes the
-        Eq. 10 delta W_j(k) - W(k) on the node's device and ships ONLY
-        the delta to the server (``push_agwu_delta``)."""
-        server = ParameterServer(self.params0, self.m)
-        devices = jax.devices()
-        device_nodes = self.tc.device_outer and len(devices) >= self.m
-        if not device_nodes:
-            server.warmup_agwu()   # compile the donated Eq. 10 push up front
-        opt_states = [self.opt.init(self.params0) for _ in range(self.m)]
-        losses, accs = [], []
-        heap: list[tuple[float, int, int]] = []     # (vtime, node, round)
-        local, base_local = {}, {}
-        rounds_done = np.zeros(self.m, np.int64)
-        node_durs = np.ones(self.m)
-
-        def pull_to_node(j: int):
-            w, _ = server.pull(j)
-            if device_nodes:
-                w = jax.device_put(w, devices[j])
-                base_local[j] = w          # W(k) snapshot, node-resident
-            return w
-
-        for j in range(self.m):
-            if device_nodes:
-                opt_states[j] = jax.device_put(opt_states[j], devices[j])
-            local[j] = pull_to_node(j)
-            heapq.heappush(heap, (0.0, j, 0))
-
-        clock = 0.0
-        while heap:
-            vt, j, r = heapq.heappop(heap)
-            w2, opt_states[j], loss, dur = self._local_round(
-                local[j], opt_states[j], j, r)
-            node_durs[j] = dur
-            clock = vt + dur
-            q = self._eval(w2) if self.eval_fn else 1.0
-            if device_nodes:
-                delta = tree_sub(w2, base_local[j])   # on node j's device
-                server.push_agwu_delta(j, delta, self._q_effective(q),
-                                       virtual_time=clock)
-            else:
-                server.push_agwu(j, w2, self._q_effective(q),
-                                 virtual_time=clock,
-                                 donate=True)  # w2 is dead after the push
-            losses.append(loss)
-            rounds_done[j] += 1
-            if int(rounds_done.min()) >= self.dataset.part.current_batch:
-                self.dataset.report_durations(node_durs * self.dataset.totals
-                                              / max(self.batch_size, 1))
-            if self.eval_fn and len(losses) % self.m == 0:
-                accs.append((clock, self._eval(server.global_weights)))
-            if rounds_done[j] < rounds:
-                local[j] = pull_to_node(j)
-                heapq.heappush(heap, (clock, j, int(rounds_done[j])))
-        return TrainReport("agwu", int(rounds_done.sum()), losses, accs,
-                           clock, 0.0, server.comm_bytes,
-                           self.dataset.totals, server.global_weights,
-                           backend="heap-device" if device_nodes else "heap")
+        last = None
+        for ev in self.run(rounds, hooks):
+            losses.append(ev.loss)
+            if ev.accuracy is not None:
+                accs.append((ev.virtual_clock, ev.accuracy))
+            last = ev
+        plan = self.last_plan
+        return TrainReport(
+            plan.strategy, len(losses), losses, accs,
+            last.virtual_clock if last else 0.0,
+            last.sync_wait if last else 0.0,
+            last.comm_bytes if last else 0,
+            self.dataset.totals,
+            last.params if last is not None else self.params0,
+            backend=plan.backend, fallback=plan.fallback)

@@ -1,0 +1,537 @@
+"""Pluggable outer-layer execution engines for the BPT training loop.
+
+The paper's outer layer is ONE algorithm — pull the global weights, run
+``local_steps`` local iterations per node, merge under Eq. 7 (SGWU) or
+Eq. 9-10 (AGWU) — with interchangeable execution substrates.  This module
+makes each substrate a first-class ``OuterEngine``:
+
+| engine             | backend      | substrate                                  |
+|--------------------|--------------|--------------------------------------------|
+| ``ScanEngine``     | ``scan``     | sync baseline: one fused scan per round    |
+| ``SequentialEngine``| ``sequential``| legacy per-node Python loop (SGWU)        |
+| ``VmapEngine``     | ``vmap``     | fused vmap(nodes) x scan(local_steps)      |
+| ``ShardMapEngine`` | ``device``   | shard_map on a real ``nodes`` mesh (SGWU)  |
+| ``HeapEngine``     | ``heap``     | AGWU event-ordered heap, host server       |
+| ``HeapDeviceEngine``| ``heap-device``| AGWU heap, node-pinned weights + deltas |
+
+``resolve_engine(TrainConfig) -> EnginePlan`` is the SINGLE point that
+inspects the ``fused_outer`` / ``device_outer`` / ``mesh_name`` flag
+combinations (grep-verifiable: no other module reads them).  It owns every
+combination rule, the device-count fallback (recorded in the plan, still
+transparent to ``train()``) and every actionable error message.
+
+Engines stream: ``events(rounds)`` yields one ``RoundEvent`` per merge —
+per round for SGWU/sync, per push for AGWU — carrying the per-node losses,
+the virtual clock, the cumulative Eq. 8 sync-wait and Eq. 11 comm-bytes,
+and the pull-able post-merge global weights.  ``BPTTrainer.run`` layers
+eval / checkpoint / callback cadences (``TrainHooks``) on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Callable, Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import make_mesh, make_nodes_mesh
+
+from .gwu import broadcast_tree, tree_sub
+from .param_server import ParameterServer
+from .types import TrainConfig
+
+__all__ = [
+    "RoundEvent", "TrainHooks", "EnginePlan", "OuterEngine",
+    "ScanEngine", "SequentialEngine", "VmapEngine", "ShardMapEngine",
+    "HeapEngine", "HeapDeviceEngine", "ENGINES", "engine_config",
+    "resolve_engine",
+]
+
+
+# ----------------------------------------------------------------------
+# streaming surface
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class RoundEvent:
+    """One outer-layer merge, as seen by a streaming caller.
+
+    SGWU/sync engines emit one event per round; AGWU engines emit one per
+    push (``node`` says which node pushed).  ``params`` is the pull-able
+    global weight set AFTER this event's merge — callers may evaluate it,
+    checkpoint it via ``repro.checkpointing``, or early-stop on ``loss``.
+    """
+    round: int                 # event index (SGWU: round; AGWU: push count)
+    node_losses: np.ndarray    # losses this event (AGWU: the pushing node's)
+    loss: float                # mean of node_losses — the TrainReport entry
+    virtual_clock: float       # emulated cluster time (Eq. 8 bookkeeping)
+    sync_wait: float           # cumulative synchronization waiting (Eq. 8)
+    comm_bytes: int            # cumulative communication volume (Eq. 11)
+    params: Any                # global weights after the merge
+    node: int = -1             # AGWU: pushing node (-1 for barrier engines)
+    accuracy: Optional[float] = None   # filled at the TrainHooks cadence
+
+
+@dataclasses.dataclass
+class TrainHooks:
+    """Caller-owned cadences for the streaming loop.
+
+    ``eval_every=0`` keeps each engine's historical default: every round
+    for SGWU, every 5 rounds for the sync baseline, every m pushes for
+    AGWU.  ``checkpoint_every`` saves ``event.params`` through
+    ``repro.checkpointing.checkpoint.save`` into ``checkpoint_dir``.
+    """
+    on_round: Optional[Callable[[RoundEvent], None]] = None
+    eval_every: int = 0            # events between accuracy evals (0=default)
+    checkpoint_every: int = 0      # events between checkpoints (0=off)
+    checkpoint_dir: str = ""
+
+
+# ----------------------------------------------------------------------
+# the single config-resolution point
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class EnginePlan:
+    """Resolved execution plan: which engine runs, and why.
+
+    ``backend`` is the substrate that will actually execute; ``requested``
+    is what the flags asked for.  When they differ, ``fallback`` carries
+    the human-readable reason (e.g. too few devices) — the fallback stays
+    transparent to ``train()`` but is recorded here and surfaced on
+    ``TrainReport.fallback``.
+    """
+    engine_cls: type
+    backend: str               # scan|sequential|vmap|device|heap|heap-device
+    strategy: str              # sync|sgwu|agwu
+    requested: str             # backend the config asked for
+    mesh: Any = None           # the `nodes` mesh (ShardMapEngine only)
+    fallback: str = ""         # "" unless backend != requested
+    devices: Any = None        # the device pool the plan was resolved
+                               # against (HeapDeviceEngine pins node j to
+                               # devices[j]; ShardMapEngine via ``mesh``)
+
+
+def _nodes_mesh(cfg: TrainConfig, m: int, devices):
+    """The `nodes` mesh for the device-sharded outer layer, or None when
+    the backend has too few devices (the transparent fallback).  A
+    ``mesh_name`` whose `nodes` axis mismatches ``outer_nodes`` is a
+    config bug, not a capacity problem, and raises."""
+    try:
+        mesh = make_mesh(cfg.mesh_name, devices=devices) if cfg.mesh_name \
+            else make_nodes_mesh(m, devices=devices)
+    except RuntimeError:
+        return None
+    if "nodes" not in mesh.axis_names or mesh.shape["nodes"] != m:
+        raise ValueError(
+            f"mesh {cfg.mesh_name!r} needs a `nodes` axis of size "
+            f"{m}, has axes {dict(mesh.shape)}")
+    return mesh
+
+
+def resolve_engine(cfg: TrainConfig, devices: Optional[Sequence] = None
+                   ) -> EnginePlan:
+    """Map a TrainConfig (+ available devices) to an execution plan.
+
+    The ONLY place in the codebase that inspects the ``fused_outer`` /
+    ``device_outer`` / ``mesh_name`` combinations.  Every rule:
+
+    - ``sync``: always ``ScanEngine``; rejects ``uneven_batches``.
+    - ``sgwu`` + ``device_outer``: ``ShardMapEngine`` on the ``mesh_name``
+      mesh (or an auto 1-D `nodes` mesh); mesh without a matching `nodes`
+      axis raises; too few devices falls back to ``VmapEngine`` with the
+      reason recorded in ``EnginePlan.fallback``.
+    - ``sgwu`` + ``fused_outer``: ``VmapEngine``.
+    - ``sgwu`` sequential: ``SequentialEngine``; rejects
+      ``uneven_batches`` (only stacked rounds realize masked stripes).
+    - ``agwu``: ``HeapDeviceEngine`` when ``device_outer`` and >= m
+      devices exist (node-pinned weights, Eq. 10 delta pushes), else
+      ``HeapEngine`` (fallback recorded); rejects ``uneven_batches``.
+    """
+    if devices is None:
+        devices = jax.devices()
+    m = cfg.outer_nodes
+    if cfg.outer_strategy == "sgwu":
+        if cfg.device_outer:
+            mesh = _nodes_mesh(cfg, m, devices)
+            if mesh is not None:
+                return EnginePlan(ShardMapEngine, "device", "sgwu",
+                                  "device", mesh=mesh)
+            return EnginePlan(
+                VmapEngine, "vmap", "sgwu", "device",
+                fallback=f"device_outer needs {m} devices, have "
+                f"{len(devices)}: running the fused vmap emulation")
+        if cfg.fused_outer:
+            return EnginePlan(VmapEngine, "vmap", "sgwu", "vmap")
+        if cfg.uneven_batches:
+            raise ValueError(
+                "uneven_batches needs the fused or device outer path")
+        return EnginePlan(SequentialEngine, "sequential", "sgwu",
+                          "sequential")
+    if cfg.uneven_batches:
+        # only the stacked-round SGWU paths realize the padded+masked
+        # stripes; silently training with uniform batches would fake
+        # the heterogeneity the flag promises
+        raise ValueError(
+            "uneven_batches needs outer_strategy='sgwu' (the fused or "
+            f"device outer path), not {cfg.outer_strategy!r}")
+    if cfg.outer_strategy == "agwu":
+        if cfg.device_outer:
+            if len(devices) >= m:
+                return EnginePlan(HeapDeviceEngine, "heap-device", "agwu",
+                                  "heap-device", devices=list(devices))
+            return EnginePlan(
+                HeapEngine, "heap", "agwu", "heap-device",
+                fallback=f"device_outer needs {m} devices, have "
+                f"{len(devices)}: running the host-heap AGWU path")
+        return EnginePlan(HeapEngine, "heap", "agwu", "heap")
+    return EnginePlan(ScanEngine, "scan", "sync", "scan")
+
+
+# ----------------------------------------------------------------------
+# engines
+# ----------------------------------------------------------------------
+class OuterEngine:
+    """One execution substrate for the outer layer.
+
+    Protocol: ``setup(rounds) -> state`` builds the parameter server /
+    optimizer state / jitted round callable; ``run_round(state, r) ->
+    RoundEvent`` executes one merge event; ``events(rounds)`` drives the
+    two as a generator.  Engines never read TrainConfig substrate flags —
+    ``resolve_engine`` already decided everything and recorded it in the
+    ``EnginePlan`` they are constructed with.
+    """
+    backend = ""
+    strategy = ""
+
+    def __init__(self, trainer, plan: EnginePlan):
+        self.t = trainer
+        self.plan = plan
+        # historical eval cadence (events between accuracy measurements);
+        # TrainHooks.eval_every overrides
+        self.default_eval_every = 1
+
+    def total_events(self, rounds: int) -> int:
+        return rounds
+
+    def setup(self, rounds: int):
+        raise NotImplementedError
+
+    def run_round(self, state, r: int) -> RoundEvent:
+        raise NotImplementedError
+
+    def events(self, rounds: int) -> Iterator[RoundEvent]:
+        state = self.setup(rounds)
+        for r in range(self.total_events(rounds)):
+            yield self.run_round(state, r)
+
+
+# -------------------------- sync baseline ---------------------------
+@dataclasses.dataclass
+class _ScanState:
+    params: Any
+    opt_state: Any
+    clock: float = 0.0
+
+
+class ScanEngine(OuterEngine):
+    """Synchronous single-node data parallelism (one fused scan/round)."""
+    backend = "scan"
+    strategy = "sync"
+
+    def __init__(self, trainer, plan):
+        super().__init__(trainer, plan)
+        self.default_eval_every = 5
+
+    def setup(self, rounds):
+        t = self.t
+        return _ScanState(t.params0, t.opt.init(t.params0))
+
+    def run_round(self, st, r):
+        t = self.t
+        t0 = time.perf_counter()
+        batches = [t.dataset.node_batch(0, t.batch_size, t.rng)
+                   for _ in range(t.tc.local_steps)]
+        stacked = {k: jnp.stack([b[k] for b in batches])
+                   for k in batches[0]}
+        st.params, st.opt_state, loss = t._scan_round(
+            st.params, st.opt_state, stacked, jnp.asarray(r, jnp.int32))
+        jax.block_until_ready(loss)
+        st.clock += (time.perf_counter() - t0) * t.speed[0]
+        return RoundEvent(round=r, node_losses=np.asarray([float(loss)]),
+                          loss=float(loss), virtual_clock=st.clock,
+                          sync_wait=0.0, comm_bytes=0, params=st.params)
+
+
+# ------------------------- stacked SGWU -----------------------------
+@dataclasses.dataclass
+class _StackedState:
+    server: ParameterServer
+    stacked_opt: Any
+    round_fn: Callable
+    batch_sharding: Any
+    clock: float = 0.0
+    sync_wait: float = 0.0
+
+
+class _StackedSGWUEngine(OuterEngine):
+    """The stacked SGWU round loop shared by the fused-vmap and
+    device-sharded engines — they differ only in the server mode, the
+    round callable and the batch placement, so the Eq. 7/8 bookkeeping
+    lives exactly once.
+
+    Per-node virtual durations are an equal share of the measured round
+    wall scaled by the node speed factors — the heterogeneity emulation
+    the sequential loop derived from per-node measurement.
+    """
+    strategy = "sgwu"
+
+    def _build(self):
+        """-> (server, stacked_opt, round_fn, batch_sharding)"""
+        raise NotImplementedError
+
+    def setup(self, rounds):
+        return _StackedState(*self._build())
+
+    def run_round(self, st, r):
+        t = self.t
+        stacked_w, _ = st.server.pull_all_stacked()
+        t0 = time.perf_counter()
+        batches = t.dataset.stacked_round_batches(
+            t.batch_size, t.tc.local_steps, t.rng,
+            uneven=t.tc.uneven_batches)
+        if st.batch_sharding is not None:
+            batches = jax.device_put(batches, st.batch_sharding)
+        stacked_w, st.stacked_opt, node_losses = st.round_fn(
+            stacked_w, st.stacked_opt, batches, jnp.asarray(r, jnp.int32))
+        node_losses = np.asarray(jax.block_until_ready(node_losses))
+        wall = time.perf_counter() - t0
+        durs = (wall / t.m) * t.speed
+        st.clock += durs.max()
+        st.sync_wait += float((durs.max() - durs).sum())      # Eq. (8)
+        if t.eval_fn:
+            qs = t._eval_nodes(stacked_w)
+        else:
+            qs = [1.0] * t.m             # SGWU normalises in Eq. 7
+        st.server.push_sgwu_stacked(stacked_w, qs, virtual_time=st.clock)
+        t.dataset.report_durations(durs)
+        return RoundEvent(round=r, node_losses=node_losses,
+                          loss=float(node_losses.mean()),
+                          virtual_clock=st.clock, sync_wait=st.sync_wait,
+                          comm_bytes=st.server.comm_bytes,
+                          params=st.server.global_weights)
+
+
+class VmapEngine(_StackedSGWUEngine):
+    """Fused outer layer: the m nodes' round is ONE jitted dispatch.
+
+    Node-stacked params/opt-states flow ``pull_all_stacked`` ->
+    ``_fused_round`` (vmap over nodes, scan over local steps, stacked
+    buffers donated) -> ``push_sgwu_stacked`` (jitted Eq. 7 merge on the
+    stack, donated).
+    """
+    backend = "vmap"
+
+    def _build(self):
+        t = self.t
+        server = ParameterServer(t.params0, t.m)
+        stacked_opt = broadcast_tree(t.opt.init(t.params0), t.m)
+        return server, stacked_opt, t._fused_round, None
+
+
+class ShardMapEngine(_StackedSGWUEngine):
+    """Device-sharded outer layer: the paper's m physical nodes.
+
+    Identical round structure to ``VmapEngine``, but the node-stacked
+    pytrees are placed with ``NamedSharding`` over the plan mesh's
+    `nodes` axis (node j resident on device j), the round runs under
+    ``shard_map``, and the Eq. 7 merge is an on-device weighted
+    all-reduce inside the device-resident ParameterServer — the global
+    weights never funnel through host or a single device.
+    """
+    backend = "device"
+
+    def _build(self):
+        t, mesh = self.t, self.plan.mesh
+        server = ParameterServer(t.params0, t.m, mesh=mesh)
+        node_sharding = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("nodes"))
+        stacked_opt = jax.device_put(
+            broadcast_tree(t.opt.init(t.params0), t.m), node_sharding)
+        return server, stacked_opt, t._get_device_round(mesh), node_sharding
+
+
+# ------------------------ sequential SGWU ---------------------------
+@dataclasses.dataclass
+class _SequentialState:
+    server: ParameterServer
+    opt_states: list
+    clock: float = 0.0
+    sync_wait: float = 0.0
+
+
+class SequentialEngine(OuterEngine):
+    """Legacy emulation: one jitted step per node per local step.
+
+    Kept as the reference the fused path is regression-tested against
+    (and the baseline ``benchmarks/outer_loop.py`` measures)."""
+    backend = "sequential"
+    strategy = "sgwu"
+
+    def setup(self, rounds):
+        t = self.t
+        return _SequentialState(ParameterServer(t.params0, t.m),
+                                [t.opt.init(t.params0) for _ in range(t.m)])
+
+    def run_round(self, st, r):
+        t = self.t
+        subs, durs = [], np.zeros(t.m)
+        node_losses = np.zeros(t.m)
+        for j in range(t.m):
+            w, _ = st.server.pull(j)
+            w2, st.opt_states[j], loss, dur = t._local_round(
+                w, st.opt_states[j], j, r)
+            q = t._eval(w2) if t.eval_fn else 1.0
+            subs.append((j, w2, max(q, 1e-3)))  # SGWU normalises in Eq. 7
+            durs[j] = dur
+            node_losses[j] = loss
+        st.clock += durs.max()
+        st.sync_wait += float((durs.max() - durs).sum())      # Eq. (8)
+        st.server.push_sgwu(subs, virtual_time=st.clock)
+        t.dataset.report_durations(durs)
+        return RoundEvent(round=r, node_losses=node_losses,
+                          loss=float(node_losses.mean()),
+                          virtual_clock=st.clock, sync_wait=st.sync_wait,
+                          comm_bytes=st.server.comm_bytes,
+                          params=st.server.global_weights)
+
+
+# ----------------------------- AGWU ---------------------------------
+@dataclasses.dataclass
+class _HeapState:
+    server: ParameterServer
+    opt_states: list
+    heap: list                     # (virtual_time, node, round)
+    local: dict
+    base_local: dict
+    rounds_done: np.ndarray
+    node_durs: np.ndarray
+    rounds: int
+    clock: float = 0.0
+
+
+class HeapEngine(OuterEngine):
+    """AGWU keeps its event-ordered heap (the ordering IS the algorithm).
+
+    One ``RoundEvent`` per push: ``total_events`` is m x rounds.  The
+    host-server variant ships full local weights through a pre-jitted,
+    buffer-donating Eq. 10 push.
+    """
+    backend = "heap"
+    strategy = "agwu"
+    device_nodes = False
+
+    def __init__(self, trainer, plan):
+        super().__init__(trainer, plan)
+        self.default_eval_every = trainer.m     # one eval per virtual round
+
+    def total_events(self, rounds):
+        return rounds * self.t.m
+
+    def _pull(self, st, j):
+        w, _ = st.server.pull(j)
+        if self.device_nodes:
+            w = jax.device_put(w, self.plan.devices[j])
+            st.base_local[j] = w       # W(k) snapshot, node-resident
+        return w
+
+    def setup(self, rounds):
+        t = self.t
+        server = ParameterServer(t.params0, t.m)
+        if not self.device_nodes:
+            server.warmup_agwu()   # compile the donated Eq. 10 push up front
+        st = _HeapState(server, [t.opt.init(t.params0) for _ in range(t.m)],
+                        [], {}, {}, np.zeros(t.m, np.int64), np.ones(t.m),
+                        rounds)
+        for j in range(t.m):
+            if self.device_nodes:
+                st.opt_states[j] = jax.device_put(st.opt_states[j],
+                                                  self.plan.devices[j])
+            st.local[j] = self._pull(st, j)
+            heapq.heappush(st.heap, (0.0, j, 0))
+        return st
+
+    def run_round(self, st, i):
+        t = self.t
+        vt, j, r = heapq.heappop(st.heap)
+        w2, st.opt_states[j], loss, dur = t._local_round(
+            st.local[j], st.opt_states[j], j, r)
+        st.node_durs[j] = dur
+        st.clock = vt + dur
+        q = t._eval(w2) if t.eval_fn else 1.0
+        if self.device_nodes:
+            delta = tree_sub(w2, st.base_local[j])   # on node j's device
+            st.server.push_agwu_delta(j, delta, t._q_effective(q),
+                                      virtual_time=st.clock)
+        else:
+            st.server.push_agwu(j, w2, t._q_effective(q),
+                                virtual_time=st.clock,
+                                donate=True)  # w2 is dead after the push
+        st.rounds_done[j] += 1
+        if int(st.rounds_done.min()) >= t.dataset.part.current_batch:
+            t.dataset.report_durations(st.node_durs * t.dataset.totals
+                                       / max(t.batch_size, 1))
+        if st.rounds_done[j] < st.rounds:
+            st.local[j] = self._pull(st, j)
+            heapq.heappush(st.heap, (st.clock, j, int(st.rounds_done[j])))
+        return RoundEvent(round=i, node=j,
+                          node_losses=np.asarray([loss]), loss=loss,
+                          virtual_clock=st.clock, sync_wait=0.0,
+                          comm_bytes=st.server.comm_bytes,
+                          params=st.server.global_weights)
+
+
+class HeapDeviceEngine(HeapEngine):
+    """AGWU with each node's weights/opt-state pinned to its own device;
+    a push computes the Eq. 10 delta W_j(k) - W(k) on the node's device
+    and ships ONLY the delta to the server (``push_agwu_delta``)."""
+    backend = "heap-device"
+    device_nodes = True
+
+
+# ----------------------------------------------------------------------
+# engine selection by name (drivers / benchmarks)
+# ----------------------------------------------------------------------
+ENGINES = {
+    "scan": ScanEngine,
+    "sequential": SequentialEngine,
+    "vmap": VmapEngine,
+    "device": ShardMapEngine,
+    "heap": HeapEngine,
+    "heap-device": HeapDeviceEngine,
+}
+
+_ENGINE_CONFIGS = {
+    "scan": dict(outer_strategy="sync"),
+    "sequential": dict(outer_strategy="sgwu", fused_outer=False,
+                       device_outer=False),
+    "vmap": dict(outer_strategy="sgwu", fused_outer=True,
+                 device_outer=False),
+    "device": dict(outer_strategy="sgwu", device_outer=True),
+    "heap": dict(outer_strategy="agwu", device_outer=False),
+    "heap-device": dict(outer_strategy="agwu", device_outer=True),
+}
+
+
+def engine_config(name: str, **overrides) -> dict:
+    """TrainConfig kwargs that ``resolve_engine`` maps to the named engine.
+
+    Drivers select substrates by name (``--engine vmap``) instead of
+    setting flag combinations by hand; device-count fallbacks still apply
+    (a ``device`` request on a small host runs — and records — ``vmap``).
+    """
+    if name not in _ENGINE_CONFIGS:
+        raise ValueError(
+            f"unknown engine {name!r}: choose one of {sorted(_ENGINE_CONFIGS)}")
+    return {**_ENGINE_CONFIGS[name], **overrides}

@@ -4,7 +4,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-__all__ = ["ModelConfig", "ShapeConfig", "TrainConfig"]
+__all__ = ["ModelConfig", "ShapeConfig", "TrainConfig",
+           "OUTER_STRATEGIES", "PARTITIONINGS", "OPTIMIZERS"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +127,11 @@ class ShapeConfig:
     mode: str                      # "train" | "prefill" | "decode"
 
 
+OUTER_STRATEGIES = ("sgwu", "agwu", "sync")
+PARTITIONINGS = ("idpa", "udpa")
+OPTIMIZERS = ("sgd", "momentum", "adamw")
+
+
 @dataclasses.dataclass
 class TrainConfig:
     learning_rate: float = 3e-4
@@ -168,3 +174,26 @@ class TrainConfig:
     # every stripe keeps the static (B, ...) shape the fused/sharded round
     # needs.  The loss_fn must honour an optional batch["mask"].
     uneven_batches: bool = False
+
+    def __post_init__(self):
+        """Choice-set validation: a typo'd strategy/partitioning/optimizer
+        fails at construction with one canonical message instead of
+        mid-train.  Flag-COMBINATION rules (uneven_batches x strategy,
+        device/mesh resolution, fallbacks) live in one place —
+        ``repro.core.engine.resolve_engine`` — so a config that needs
+        runtime context (device counts) still fails there, before any
+        training work, with the same message everywhere."""
+        for field, value, allowed in (
+                ("outer_strategy", self.outer_strategy, OUTER_STRATEGIES),
+                ("partitioning", self.partitioning, PARTITIONINGS),
+                ("optimizer", self.optimizer, OPTIMIZERS)):
+            if value not in allowed:
+                raise ValueError(
+                    f"TrainConfig.{field}={value!r}: choose one of "
+                    f"{allowed}")
+        if self.outer_nodes < 1:
+            raise ValueError(
+                f"TrainConfig.outer_nodes={self.outer_nodes}: need >= 1")
+        if self.local_steps < 1:
+            raise ValueError(
+                f"TrainConfig.local_steps={self.local_steps}: need >= 1")

@@ -28,20 +28,20 @@ MESHES = {
 }
 
 
-def make_mesh(name: str):
+def make_mesh(name: str, devices=None):
     shape, axes = MESHES[name]
     n = math.prod(shape)
-    devices = jax.devices()[:n]
-    if len(devices) < n:
+    pool = list(jax.devices() if devices is None else devices)
+    if len(pool) < n:
         raise RuntimeError(
-            f"mesh {name} needs {n} devices, have {len(jax.devices())} "
+            f"mesh {name} needs {n} devices, have {len(pool)} "
             "(the dry-run must set --xla_force_host_platform_device_count "
             "before any jax import)")
     import numpy as np
-    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+    return jax.sharding.Mesh(np.asarray(pool[:n]).reshape(shape), axes)
 
 
-def make_nodes_mesh(num_nodes: int):
+def make_nodes_mesh(num_nodes: int, devices=None):
     """1-D ``nodes`` mesh for the device-sharded outer layer.
 
     One device per computing node, any node count — the named ``nodes<m>``
@@ -52,14 +52,14 @@ def make_nodes_mesh(num_nodes: int):
     """
     if num_nodes < 1:
         raise ValueError("need at least one node")
-    devices = jax.devices()
-    if len(devices) < num_nodes:
+    pool = list(jax.devices() if devices is None else devices)
+    if len(pool) < num_nodes:
         raise RuntimeError(
-            f"nodes mesh needs {num_nodes} devices, have {len(devices)} "
+            f"nodes mesh needs {num_nodes} devices, have {len(pool)} "
             "(set XLA_FLAGS=--xla_force_host_platform_device_count to "
             "emulate a multi-device host)")
     import numpy as np
-    return jax.sharding.Mesh(np.asarray(devices[:num_nodes]), ("nodes",))
+    return jax.sharding.Mesh(np.asarray(pool[:num_nodes]), ("nodes",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,19 +1,23 @@
 """End-to-end training driver: BPT-CNN outer layer over any assigned arch.
 
 CPU-scale by default (reduced configs + small synthetic corpus) so the same
-driver that launches on a pod runs as a demo here:
+driver that launches on a pod runs as a demo here (`pip install -e .`
+first; bare checkouts can prefix `PYTHONPATH=src`):
 
-    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+    python -m repro.launch.train --arch yi-6b --reduced \
         --outer agwu --partitioning idpa --rounds 8
 
-On real hardware, ``--mesh pod`` shards each virtual node's step over the
-mesh; here the outer layer (IDPA + AGWU/SGWU — the paper's contribution)
-runs with real jitted steps on CPU.
+``--device-outer`` places the node axis on a real `nodes` device mesh
+(``--mesh nodes4`` to name a `launch.mesh.MESHES` member; emulate with
+XLA_FLAGS=--xla_force_host_platform_device_count=4), ``--uneven-batches``
+realizes IDPA-proportional per-node loads, and ``--engine`` selects the
+outer-layer execution engine by name (`repro.core.engine.ENGINES`).  The
+outer layer (IDPA + AGWU/SGWU — the paper's contribution) runs with real
+jitted steps on CPU.
 """
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import time
 
@@ -24,6 +28,7 @@ import numpy as np
 from repro import configs
 from repro.checkpointing import checkpoint
 from repro.core.bpt_trainer import BPTTrainer
+from repro.core.engine import ENGINES, engine_config
 from repro.core.types import TrainConfig
 from repro.data.pipeline import IDPADataset, host_batch, pack_sequences
 from repro.data.synthetic import lm_corpus
@@ -46,6 +51,20 @@ def main(argv=None):
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--outer", default="agwu",
                     choices=["agwu", "sgwu", "sync"])
+    ap.add_argument("--engine", default="", choices=sorted(ENGINES),
+                    help="select the execution engine by name (overrides "
+                    "--outer/--device-outer)")
+    ap.add_argument("--device-outer", action="store_true",
+                    help="shard the node axis over a real `nodes` device "
+                    "mesh (one node per device; falls back to the fused "
+                    "vmap emulation when fewer than --nodes devices exist)")
+    ap.add_argument("--mesh", default="",
+                    help="named launch.mesh.MESHES entry for the node axis "
+                    "(e.g. nodes4; needs a `nodes` axis of size --nodes); "
+                    "empty = auto 1-D nodes mesh")
+    ap.add_argument("--uneven-batches", action="store_true",
+                    help="IDPA-proportional per-node batch loads "
+                    "(padded+masked stripes; needs the SGWU stacked paths)")
     ap.add_argument("--partitioning", default="idpa",
                     choices=["idpa", "udpa"])
     ap.add_argument("--rounds", type=int, default=8)
@@ -79,6 +98,11 @@ def main(argv=None):
     def loss_fn(p, batch):
         rows = batch["rows"]
         b = host_batch(rows)
+        if "mask" in batch:
+            # uneven stripes: padded rows (mask 0) carry no loss — label
+            # them -1, which chunked_cross_entropy excludes from the mean
+            b["labels"] = jnp.where(batch["mask"][:, None] > 0,
+                                    b["labels"], -1)
         if frontend is not None:
             b["frontend_embeds"] = frontend[:rows.shape[0]]
         return lm.loss_fn(p, b, cfg)
@@ -88,16 +112,23 @@ def main(argv=None):
                           batches=min(4, args.rounds),
                           partitioning=args.partitioning,
                           frequencies=1.0 / speeds)
-    tc = TrainConfig(learning_rate=args.lr, outer_strategy=args.outer,
-                     partitioning=args.partitioning, outer_nodes=args.nodes,
-                     local_steps=args.local_steps, warmup_steps=5,
-                     total_steps=args.rounds * args.local_steps * args.nodes,
-                     seed=args.seed)
+    common = dict(learning_rate=args.lr, partitioning=args.partitioning,
+                  outer_nodes=args.nodes, local_steps=args.local_steps,
+                  warmup_steps=5, seed=args.seed,
+                  total_steps=args.rounds * args.local_steps * args.nodes,
+                  mesh_name=args.mesh, uneven_batches=args.uneven_batches)
+    if args.engine:     # engine selected by name through the engine API
+        tc = TrainConfig(**engine_config(args.engine, **common))
+    else:
+        tc = TrainConfig(outer_strategy=args.outer,
+                         device_outer=args.device_outer, **common)
     trainer = BPTTrainer(loss_fn, params, ds, tc,
                          batch_size=args.batch_size, speed_factors=speeds)
     t0 = time.time()
     report = trainer.train(args.rounds)
     wall = time.time() - t0
+    if report.fallback:
+        print(f"[train] engine fallback: {report.fallback}")
     print(f"[train] done in {wall:.1f}s wall; report:")
     print(json.dumps(report.summary(), indent=2, default=str))
     first, last = report.losses[0], report.losses[-1]
