@@ -13,7 +13,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.dense import dense_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pool2d import max_pool2d_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
 from .common import emit, time_call
@@ -77,6 +79,80 @@ def bench_conv2d_fwd_bwd(gate_atol: float = 1e-4):
             f"(gate {gate_atol:.0e} x scale {scale:.1f})")
 
 
+def bench_pool2d(gate_atol: float = 1e-4):
+    """Forward+backward pooling benchmark, GATED against the jnp oracle.
+
+    ``us_per_call`` times the jitted ref value_and_grad on CPU;
+    ``derived`` carries the Pallas custom_vjp max |err| for out/dx vs that
+    oracle (ties included — the input is relu'd so windows tie often).
+    Any error above ``gate_atol`` raises.
+    """
+    key = jax.random.PRNGKey(4)
+    k1, k2 = jax.random.split(key)
+    x = jax.nn.relu(jax.random.normal(k1, (8, 32, 32, 16)))
+    cot = jax.random.normal(k2, (8, 16, 16, 16))
+
+    def loss_ref(x_):
+        return jnp.sum(ref.max_pool2d_ref(x_) * cot)
+
+    def loss_pallas(x_):
+        return jnp.sum(max_pool2d_pallas(x_) * cot)
+
+    us = time_call(jax.jit(jax.value_and_grad(loss_ref)), x)
+    out_err = float(jnp.abs(max_pool2d_pallas(x) -
+                            ref.max_pool2d_ref(x)).max())
+    dx_err = float(jnp.abs(jax.grad(loss_pallas)(x) -
+                           jax.grad(loss_ref)(x)).max())
+    derived = f"out_err={out_err:.2e},dx_err={dx_err:.2e}"
+    emit("kernel_pool2d_fwdbwd_32x32x16", us, derived)
+    if max(out_err, dx_err) > gate_atol:
+        raise RuntimeError(
+            f"pallas max_pool2d fwd+bwd off the jnp oracle: {derived} "
+            f"(gate {gate_atol:.0e})")
+
+
+def bench_dense(gate_atol: float = 1e-4):
+    """Forward+backward fused-dense benchmark, GATED against the jnp oracle.
+
+    ``us_per_call`` times the jitted jnp value_and_grad on CPU;
+    ``derived`` carries the Pallas custom_vjp max |err| for out/dx/dw/db
+    at the Alg. 4.2-style block (64 over 512 neurons).  Any error above
+    ``gate_atol * scale`` raises — the G_FC correctness gate runnable
+    outside pytest.
+    """
+    key = jax.random.PRNGKey(5)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (32, 256))
+    w = jax.random.normal(k2, (256, 512))
+    b = jax.random.normal(k3, (512,))
+
+    def loss_ref(x_, w_, b_):
+        return jnp.sum(ref.dense_ref(x_, w_, b_, activation="relu") ** 2)
+
+    def loss_pallas(x_, w_, b_):
+        return jnp.sum(dense_pallas(x_, w_, b_, activation="relu",
+                                    block=64) ** 2)
+
+    us = time_call(jax.jit(jax.value_and_grad(loss_ref, argnums=(0, 1, 2))),
+                   x, w, b)
+    out_err = float(jnp.abs(
+        dense_pallas(x, w, b, activation="relu", block=64) -
+        ref.dense_ref(x, w, b, activation="relu")).max())
+    got = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    errs = {"out": out_err}
+    for name, g, r in zip(("dx", "dw", "db"), got, want):
+        errs[name] = float(jnp.abs(g - r).max())
+    scale = float(max(jnp.abs(r).max() for r in want))
+    derived = ",".join(f"{k}_err={v:.2e}" for k, v in errs.items())
+    emit("kernel_dense_fwdbwd_32x256x512", us, derived)
+    worst = max(errs.values())
+    if worst > gate_atol * max(scale, 1.0):
+        raise RuntimeError(
+            f"pallas dense fwd+bwd off the jnp oracle: {derived} "
+            f"(gate {gate_atol:.0e} x scale {scale:.1f})")
+
+
 def bench_flash():
     key = jax.random.PRNGKey(1)
     ks = jax.random.split(key, 3)
@@ -112,5 +188,13 @@ def bench_rmsnorm():
 def run_all():
     bench_conv2d()
     bench_conv2d_fwd_bwd()
+    bench_pool2d()
+    bench_dense()
     bench_flash()
     bench_rmsnorm()
+
+
+if __name__ == "__main__":
+    # the correctness-gated micro-benchmarks double as a CI gate:
+    # any kernel off its oracle raises and fails the job
+    run_all()

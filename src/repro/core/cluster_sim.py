@@ -146,7 +146,6 @@ class ClusterSim:
         totals = None
         durations = None
         acc_trace = []
-        sample_offsets = np.zeros(self.m, dtype=np.int64)
 
         for it in range(self.K):
             totals = self._allocate(durations) if not self.part.done or \
@@ -162,7 +161,7 @@ class ClusterSim:
             for j in range(self.m):
                 w, _ = server.pull(j)
                 if worker_train is not None:
-                    idx = self._indices(j, totals, sample_offsets)
+                    idx = self._indices(j, totals)
                     new_w, q = worker_train(j, w, idx, it)
                 else:
                     new_w, q = w, 1.0
@@ -180,27 +179,31 @@ class ClusterSim:
         busy = np.zeros(self.m)
         iters_done = np.zeros(self.m, dtype=np.int64)
         acc_trace = []
-        sample_offsets = np.zeros(self.m, dtype=np.int64)
 
         totals = self._allocate(None)
         # priority queue of (completion_time, node)
         heap: list[tuple[float, int]] = []
         clock = 0.0
         local_w = {}
+        # the durations the simulation actually charged each node (most
+        # recent work unit) — the IDPA feedback signal, Alg. 3.1's
+        # measured t_j.  Re-rolling fresh noisy durations here would
+        # consume extra RNG and decouple allocation from observed load.
+        charged = np.zeros(self.m)
         for j in range(self.m):
             w, _ = server.pull(j)
             local_w[j] = w
             d = self._duration(j, int(totals[j]))
+            charged[j] = d
             busy[j] += d
             heapq.heappush(heap, (d, j))
 
-        last_round_durations = np.zeros(self.m)
         while heap:
             t_done, j = heapq.heappop(heap)
             clock = t_done
             it = int(iters_done[j])
             if worker_train is not None:
-                idx = self._indices(j, totals, sample_offsets)
+                idx = self._indices(j, totals)
                 new_w, q = worker_train(j, local_w[j], idx, it)
             else:
                 new_w, q = local_w[j], 1.0
@@ -208,28 +211,26 @@ class ClusterSim:
             if eval_fn is not None:
                 acc_trace.append((clock, eval_fn(server.global_weights)))
             iters_done[j] += 1
-            last_round_durations[j] = t_done
 
             # incremental allocation: advance once every node finished
-            # iteration `a` (the paper allocates per global batch round)
+            # iteration `a` (the paper allocates per global batch round),
+            # feeding IDPA the durations the simulation charged
             if not self.part.done and int(iters_done.min()) >= \
                     self.part.current_batch:
-                node_busy = np.array(
-                    [self._duration(k, int(totals[k])) for k in range(self.m)])
-                totals = self._allocate(node_busy)
+                totals = self._allocate(charged.copy())
 
             if iters_done[j] < self.K:
                 w, _ = server.pull(j)
                 local_w[j] = w
                 d = self._duration(j, int(totals[j]))
+                charged[j] = d
                 busy[j] += d
                 heapq.heappush(heap, (t_done + d, j))
 
         return self._result(server, clock, 0.0, busy, totals, acc_trace)
 
     # ------------------------------------------------------------------
-    def _indices(self, j: int, totals: np.ndarray,
-                 offsets: np.ndarray) -> np.ndarray:
+    def _indices(self, j: int, totals: np.ndarray) -> np.ndarray:
         """Stable per-node sample ranges: node j owns a contiguous stripe."""
         starts = np.concatenate([[0], np.cumsum(totals)[:-1]])
         return np.arange(starts[j], starts[j] + totals[j]) % max(self.N, 1)

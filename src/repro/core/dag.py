@@ -23,7 +23,7 @@ import numpy as np
 __all__ = [
     "Task", "TaskDAG", "conv_layer_tasks", "cnn_training_dag",
     "priority_schedule", "ScheduleResult", "conv_output_shape",
-    "conv_grid_tasks", "choose_oc_tile",
+    "conv_grid_tasks", "choose_oc_tile", "fc_grid_tasks", "choose_fc_block",
 ]
 
 
@@ -228,6 +228,55 @@ def choose_oc_tile(batch: int, cout: int, workers: int = 8,
         if makespan < best_makespan - 1e-9:
             best_tile, best_makespan = tile, makespan
     return best_tile
+
+
+def fc_grid_tasks(dag: TaskDAG, d_out: int, block: int,
+                  cost_per_neuron: float = 1.0, deps: Sequence[int] = (),
+                  name: str = "pt_fc") -> list[int]:
+    """The TPU-executed FC task list: one task per output-neuron block.
+
+    This is the paper's §4.1.2 G_FC granularity expressed at the grid the
+    Pallas dense kernel actually runs — (d_out/block,), each cell one
+    ``(B, Din) x (Din, block)`` matmul task (the whole batch lives in one
+    cell, unlike the conv grid's batch axis).  All tasks are mutually
+    independent; each costs ``block * cost_per_neuron``.
+    """
+    if block <= 0 or d_out % block:
+        raise ValueError(f"block {block} must divide d_out {d_out}")
+    cost = block * cost_per_neuron
+    return [dag.add(f"{name}[{n}]", cost, deps)
+            for n in range(0, d_out, block)]
+
+
+@functools.lru_cache(maxsize=None)
+def choose_fc_block(d_out: int, workers: int = 8, min_block: int = 8) -> int:
+    """Pick the output-neuron block for the executed dense grid (G_FC).
+
+    The ``choose_oc_tile`` sibling for the FC stack: every candidate block
+    (divisors of ``d_out`` no smaller than ``min_block``, clamped to
+    ``d_out``) builds its task grid with :func:`fc_grid_tasks` and is
+    list-scheduled with Alg. 4.2 (:func:`priority_schedule`) over
+    ``workers`` threads; the block with the minimal makespan wins, larger
+    blocks breaking ties (fewer, bigger MXU-friendly tasks).  The dense
+    kernel runs exactly the grid this model scores — decomposition and
+    executed grid stay one concept.
+
+    ``min_block`` keeps blocks lane-friendly on TPU — per-neuron scalar
+    tasks (the paper's CPU/GPU granularity) waste the 128-wide MXU lanes.
+    """
+    if d_out < 1:
+        raise ValueError("d_out must be >= 1")
+    floor = min(d_out, max(1, min_block))
+    best_block, best_makespan = d_out, float("inf")
+    for block in range(d_out, floor - 1, -1):
+        if d_out % block:
+            continue
+        dag = TaskDAG()
+        fc_grid_tasks(dag, d_out, block)
+        makespan = priority_schedule(dag, workers).makespan
+        if makespan < best_makespan - 1e-9:
+            best_block, best_makespan = block, makespan
+    return best_block
 
 
 # ----------------------------------------------------------------------

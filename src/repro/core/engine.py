@@ -250,11 +250,13 @@ class ScanEngine(OuterEngine):
 
     def run_round(self, st, r):
         t = self.t
-        t0 = time.perf_counter()
         batches = [t.dataset.node_batch(0, t.batch_size, t.rng)
                    for _ in range(t.tc.local_steps)]
         stacked = {k: jnp.stack([b[k] for b in batches])
                    for k in batches[0]}
+        # same contract as the stacked engines: the clock starts after the
+        # host batch draw, so the virtual time is compute-only
+        t0 = time.perf_counter()
         st.params, st.opt_state, loss = t._scan_round(
             st.params, st.opt_state, stacked, jnp.asarray(r, jnp.int32))
         jax.block_until_ready(loss)
@@ -297,12 +299,15 @@ class _StackedSGWUEngine(OuterEngine):
     def run_round(self, st, r):
         t = self.t
         stacked_w, _ = st.server.pull_all_stacked()
-        t0 = time.perf_counter()
         batches = t.dataset.stacked_round_batches(
             t.batch_size, t.tc.local_steps, t.rng,
             uneven=t.tc.uneven_batches)
         if st.batch_sharding is not None:
             batches = jax.device_put(batches, st.batch_sharding)
+        # the Eq. 8 wall starts AFTER the host batch draw + device
+        # placement: data prep is the main server's work, not node compute,
+        # and must not pollute the sync-wait or the IDPA duration feedback
+        t0 = time.perf_counter()
         stacked_w, st.stacked_opt, node_losses = st.round_fn(
             stacked_w, st.stacked_opt, batches, jnp.asarray(r, jnp.int32))
         node_losses = np.asarray(jax.block_until_ready(node_losses))

@@ -19,6 +19,12 @@ __all__ = ["pack_sequences", "IDPADataset", "host_batch"]
 
 def pack_sequences(corpus: np.ndarray, seq_len: int) -> np.ndarray:
     """Pack a token stream into (N, seq_len+1) rows (inputs+shifted labels)."""
+    if seq_len < 1:
+        raise ValueError(f"seq_len must be >= 1, got {seq_len}")
+    if len(corpus) < seq_len + 1:
+        raise ValueError(
+            f"corpus of {len(corpus)} tokens is too short to pack even one "
+            f"row: need at least seq_len + 1 = {seq_len + 1} tokens")
     n = (len(corpus) - 1) // seq_len
     rows = np.stack([corpus[i * seq_len:(i + 1) * seq_len + 1]
                      for i in range(n)])

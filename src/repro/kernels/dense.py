@@ -1,0 +1,217 @@
+"""Pallas TPU fused dense layer — the paper's §4.1.2 FC task lists.
+
+The full-connection layer's training step decomposes into per-neuron-block
+tasks: the forward (Eq. 19 local response + Eq. 2 bias/activation epilogue
+fused into ONE ``pallas_call``) and the backward per-block weight-gradient
+tasks G_FC (Eq. 20-21).  The ``pallas_call`` grid cell is one task — a
+``(B, Din) x (Din, block)`` matmul over one output-neuron block — and the
+block size is the task granularity, chosen by the same Alg. 4.2 cost model
+as the conv tile (``core.dag.choose_fc_block``).
+
+Three kernels cover one training step of the layer:
+
+* ``_dense_fwd_kernel`` — matmul + fused bias/activation epilogue.
+* ``_dense_dx_kernel`` — input gradient: the same matmul body fed the
+  cotangent and the transposed weights, gridded over input-feature blocks.
+* ``_dense_dwdb_kernel`` — one G_FC task (§4.1.2): the weight gradient for
+  one neuron block (x^T contracted against the cotangent block over the
+  batch) with the bias gradient fused into the same cell.
+
+``dense_pallas`` ties them together with ``jax.custom_vjp`` so ``jax.grad``
+through the Pallas path trains the FC stack end-to-end (Eq. 19-21) without
+falling back to the jnp reference.
+
+Layout: x (B, Din), w (Din, Dout), b (Dout,) — callers with leading batch
+dims flatten through ``ops.dense``.  ``interpret=None`` resolves via
+``kernels.ops._interpret()`` — interpret mode off TPU, compiled on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import resolve_interpret
+
+__all__ = ["dense_pallas"]
+
+_ACTIVATIONS = ("none", "relu")
+
+
+# ----------------------------------------------------------------------
+# Kernels
+# ----------------------------------------------------------------------
+def _dense_fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One FC forward task: (B, Din) x (Din, Nt) + bias + activation.
+
+    x (B, Din); w (Din, Nt); b (1, Nt); o (B, Nt).
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...],
+                  preferred_element_type=jnp.float32)
+    acc += b_ref[0, :].astype(jnp.float32)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _dense_dx_kernel(g_ref, wt_ref, o_ref):
+    """Input-gradient task: the same matmul body, no epilogue.
+
+    g (B, Dout); wt (Dout, It) — the transposed weights; o (B, It).
+    """
+    o_ref[...] = jnp.dot(g_ref[...], wt_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def _dense_dwdb_kernel(x_ref, g_ref, dw_ref, db_ref):
+    """One G_FC task (§4.1.2): weight + bias gradient for one neuron block.
+
+    x (B, Din); g (B, Nt); dw (Din, Nt); db (1, Nt).  The cell contracts
+    over the batch (Eq. 21's sum over samples) and fuses the Eq. 20 bias
+    gradient (cotangent batch-sum) into the same task.
+    """
+    dw_ref[...] = jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(dw_ref.dtype)
+    db_ref[0, :] = jnp.sum(g_ref[...], axis=0,
+                           dtype=jnp.float32).astype(db_ref.dtype)
+
+
+# ----------------------------------------------------------------------
+# pallas_call wrappers
+# ----------------------------------------------------------------------
+def _block_of(features: int, block: int) -> int:
+    """Derive a tile over a *different* feature axis than the one the
+    caller sized ``block`` for (the dx grid tiles Din with a knob chosen
+    for Dout): reuse it when it divides, otherwise run one task.  The
+    primary axis validates strictly in ``dense_pallas``.
+    """
+    if block and features % block == 0:
+        return block
+    return features
+
+
+def _forward(x, w, b, *, activation: str, block: int, interpret: bool):
+    B, Din = x.shape
+    Dout = w.shape[-1]
+    nt = block or Dout
+    return pl.pallas_call(
+        functools.partial(_dense_fwd_kernel, activation=activation),
+        grid=(Dout // nt,),
+        in_specs=[
+            pl.BlockSpec((B, Din), lambda n: (0, 0)),
+            pl.BlockSpec((Din, nt), lambda n: (0, n)),
+            pl.BlockSpec((1, nt), lambda n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((B, nt), lambda n: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((B, Dout), x.dtype),
+        interpret=interpret,
+    )(x, w, b.reshape(1, Dout))
+
+
+def _backward_dx(g, w, out_dtype, *, block: int, interpret: bool):
+    """dL/dx = g @ w^T, gridded over input-feature blocks."""
+    B, Dout = g.shape
+    Din = w.shape[0]
+    it = _block_of(Din, block)
+    return pl.pallas_call(
+        _dense_dx_kernel,
+        grid=(Din // it,),
+        in_specs=[
+            pl.BlockSpec((B, Dout), lambda n: (0, 0)),
+            pl.BlockSpec((Dout, it), lambda n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((B, it), lambda n: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((B, Din), out_dtype),
+        interpret=interpret,
+    )(g, w.transpose(1, 0))
+
+
+def _backward_dwdb(x, g, *, block: int, interpret: bool):
+    """dL/dw, dL/db over the per-block G_FC grid (one cell per block)."""
+    B, Din = x.shape
+    Dout = g.shape[-1]
+    nt = block or Dout
+    dw, db = pl.pallas_call(
+        _dense_dwdb_kernel,
+        grid=(Dout // nt,),
+        in_specs=[
+            pl.BlockSpec((B, Din), lambda n: (0, 0)),
+            pl.BlockSpec((B, nt), lambda n: (0, n)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Din, nt), lambda n: (0, n)),
+            pl.BlockSpec((1, nt), lambda n: (0, n)),
+        ],
+        # f32 outputs: gradients round to the param dtypes at the call site
+        out_shape=[
+            jax.ShapeDtypeStruct((Din, Dout), jnp.float32),
+            jax.ShapeDtypeStruct((1, Dout), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, g)
+    return dw, db.reshape(Dout)
+
+
+# ----------------------------------------------------------------------
+# custom_vjp wiring
+# ----------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dense(cfg, x, w, b):
+    activation, block, interpret = cfg
+    return _forward(x, w, b, activation=activation, block=block,
+                    interpret=interpret)
+
+
+def _dense_fwd(cfg, x, w, b):
+    out = _dense(cfg, x, w, b)
+    # The post-activation output doubles as the relu mask (out > 0 iff the
+    # pre-activation was > 0), so no pre-activation residual is needed.
+    return out, (x, w, b, out)
+
+
+def _dense_bwd(cfg, residuals, g):
+    activation, block, interpret = cfg
+    x, w, b, out = residuals
+    if activation == "relu":
+        g = g * (out > 0).astype(g.dtype)
+    dx = _backward_dx(g, w, x.dtype, block=block, interpret=interpret)
+    dw, db = _backward_dwdb(x, g, block=block, interpret=interpret)
+    return dx, dw.astype(w.dtype), db.astype(b.dtype)
+
+
+_dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# ----------------------------------------------------------------------
+# Public entry point
+# ----------------------------------------------------------------------
+def dense_pallas(x, w, b=None, *, activation: str = "none", block: int = 0,
+                 interpret: bool | None = None):
+    """Differentiable fused dense: (B, Din) x (Din, Dout) -> (B, Dout).
+
+    ``b`` (Dout,) and ``activation`` fuse the Eq. (2) epilogue into the
+    forward kernel; ``jax.grad`` runs the two backward Pallas kernels via
+    ``custom_vjp`` (the §4.1.2 per-block G_FC gradient tasks).  ``block``
+    is the output-neuron block (0 = all neurons in one task); the grid
+    (Dout/block,) is the paper's FC task list.  ``interpret=None``
+    resolves via ``kernels.ops._interpret()`` (compiled only on TPU).
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(
+            f"dense_pallas takes 2-D x and w, got {x.shape} x {w.shape} "
+            "(flatten leading dims through ops.dense)")
+    if block and w.shape[-1] % block:
+        raise ValueError(
+            f"block {block} must divide Dout {w.shape[-1]} "
+            "(0 = one task for the whole layer)")
+    interpret = resolve_interpret(interpret)
+    if b is None:
+        b = jnp.zeros((w.shape[-1],), x.dtype)
+    cfg = (activation, int(block), bool(interpret))
+    return _dense(cfg, x, w, b)

@@ -4,31 +4,48 @@ Implementation selection:
   * ``REPRO_KERNEL_IMPL=ref``    — pure-jnp oracles (default on CPU; what
     the 512-device dry-run lowers).
   * ``REPRO_KERNEL_IMPL=pallas`` — Pallas kernels (interpret mode off TPU,
-    compiled on TPU).  ``conv2d`` is fully differentiable through its
-    ``custom_vjp`` backward kernels, so this is a real training path.
+    compiled on TPU).  ``conv2d``, ``max_pool2d`` and ``dense`` are fully
+    differentiable through their ``custom_vjp`` backward kernels, so the
+    whole CNN forward+backward (conv Eq. 13, pooling Eq. 15/18, FC
+    Eq. 19-21) is a real Pallas training path.
 
 Kernel entry points take ``interpret=None`` and resolve it through
 ``_interpret()`` here — the single switch that decides interpret-vs-compiled
 — so no call site can silently ship interpret-mode kernels to a TPU.
 
-``conv2d``'s default ``oc_tile`` comes from ``core.dag.choose_oc_tile``:
-the paper's task-decomposition cost model (Alg. 4.2 list scheduling over
-the candidate PT_Conv grids) picks the output-channel tile the executed
-Pallas grid uses, keeping decomposition and execution one concept.
+**Fallback contract**: when the pallas impl cannot serve a call (e.g. a
+strided conv, overlapping pooling, a dense cell too large for VMEM) the
+fallback to the jnp ref is never silent.  An explicit ``impl="pallas"``
+argument raises ``NotImplementedError``; an environment/default-selected
+pallas impl warns once per (op, reason) with ``KernelFallbackWarning`` and
+records the event in ``fallback_events()`` — tests assert the log stays
+empty on the paths that must be all-Pallas.  Dispatch happens in Python,
+so events are recorded at *trace* time: one entry per traced call site,
+not per compiled execution (re-running an already-jitted function records
+nothing new — assert on the log in eager code or around fresh traces).
+
+Default task granularities come from ``core.dag``'s Alg. 4.2 cost model —
+``conv2d``'s ``oc_tile`` from ``choose_oc_tile`` and ``dense``'s ``block``
+from ``choose_fc_block`` — so the paper's task decomposition and the
+executed Pallas grids stay one concept.
 """
 from __future__ import annotations
 
 import os
+import warnings
 
 import jax
 
 from . import ref
 from .conv2d import conv2d_pallas
+from .dense import dense_pallas
 from .flash_attention import flash_attention_pallas
+from .pool2d import max_pool2d_pallas
 from .rmsnorm import rmsnorm_pallas
 
-__all__ = ["conv2d", "max_pool2d", "flash_attention", "rmsnorm",
-           "default_impl"]
+__all__ = ["conv2d", "max_pool2d", "dense", "flash_attention", "rmsnorm",
+           "default_impl", "KernelFallbackWarning", "fallback_events",
+           "clear_fallback_log"]
 
 
 def default_impl() -> str:
@@ -43,6 +60,48 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ----------------------------------------------------------------------
+# the explicit-fallback contract
+# ----------------------------------------------------------------------
+class KernelFallbackWarning(UserWarning):
+    """A pallas-selected dispatch served a call from the jnp ref."""
+
+
+_FALLBACKS: dict[tuple[str, str], int] = {}
+
+
+def _fallback(op: str, reason: str, explicit: bool) -> None:
+    """Record a pallas -> ref fallback; never silent.
+
+    ``explicit`` (the caller passed ``impl="pallas"``) raises — the caller
+    asked for a kernel that cannot serve the call.  An env/default-selected
+    pallas impl warns once per (op, reason) and logs the event.
+    """
+    if explicit:
+        raise NotImplementedError(
+            f"{op}: impl='pallas' was requested explicitly but {reason}; "
+            "pass impl='ref' (or fix the call) to opt in to the jnp "
+            "reference instead")
+    key = (op, reason)
+    first = key not in _FALLBACKS
+    _FALLBACKS[key] = _FALLBACKS.get(key, 0) + 1
+    if first:
+        warnings.warn(f"{op}: falling back to the jnp ref — {reason}",
+                      KernelFallbackWarning, stacklevel=3)
+
+
+def fallback_events() -> dict[tuple[str, str], int]:
+    """(op, reason) -> count of pallas dispatches served by the ref."""
+    return dict(_FALLBACKS)
+
+
+def clear_fallback_log() -> None:
+    _FALLBACKS.clear()
+
+
+# ----------------------------------------------------------------------
+# dispatch wrappers
+# ----------------------------------------------------------------------
 def conv2d(x, w, b=None, padding: str = "SAME", stride: int = 1,
            activation: str = "none", impl: str = "",
            oc_tile: int | None = None):
@@ -50,15 +109,23 @@ def conv2d(x, w, b=None, padding: str = "SAME", stride: int = 1,
 
     The Pallas path (stride 1) is differentiable end-to-end via
     ``custom_vjp``; ``oc_tile=None`` asks the §4 cost model for the task
-    granularity, ``oc_tile=0`` forces one task per batch image.
+    granularity, ``oc_tile=0`` forces one task per batch image.  A strided
+    call under pallas takes the explicit-fallback contract (the paper's
+    CNNs pool instead of striding, so the kernel is stride-1 only).
     """
+    explicit = impl == "pallas"
     impl = impl or default_impl()
-    if impl == "pallas" and stride == 1:
-        if oc_tile is None:
-            from repro.core.dag import choose_oc_tile
-            oc_tile = choose_oc_tile(int(x.shape[0]), int(w.shape[-1]))
-        return conv2d_pallas(x, w, b, padding=padding, activation=activation,
-                             oc_tile=oc_tile, interpret=_interpret())
+    if impl == "pallas":
+        if stride == 1:
+            if oc_tile is None:
+                from repro.core.dag import choose_oc_tile
+                oc_tile = choose_oc_tile(int(x.shape[0]), int(w.shape[-1]))
+            return conv2d_pallas(x, w, b, padding=padding,
+                                 activation=activation, oc_tile=oc_tile,
+                                 interpret=_interpret())
+        _fallback("conv2d",
+                  f"stride={stride} is unsupported (stride-1 kernel only)",
+                  explicit)
     out = ref.conv2d_ref(x, w, padding=padding, stride=stride)
     if b is not None:
         out = out + b.astype(out.dtype)    # match the kernel's output dtype
@@ -69,8 +136,88 @@ def conv2d(x, w, b=None, padding: str = "SAME", stride: int = 1,
     return out
 
 
-def max_pool2d(x, window: int = 2, stride: int = 2):
+def max_pool2d(x, window: int = 2, stride: int = 2, impl: str = ""):
+    """Max pooling (paper Eq. 15; backward Eq. 18 via ``custom_vjp``).
+
+    The Pallas path covers non-overlapping pooling (``window == stride``,
+    the paper's configuration); anything else takes the explicit-fallback
+    contract.  Note the jnp ref is also non-overlapping-only today, so an
+    overlapping env-selected fallback will raise there — loudly, after the
+    recorded warning — rather than silently pool the wrong windows.
+    """
+    explicit = impl == "pallas"
+    impl = impl or default_impl()
+    if impl == "pallas":
+        if window == stride:
+            return max_pool2d_pallas(x, window=window, stride=stride,
+                                     interpret=_interpret())
+        _fallback("max_pool2d",
+                  f"window={window} stride={stride} is unsupported "
+                  "(non-overlapping pooling only)", explicit)
     return ref.max_pool2d_ref(x, window=window, stride=stride)
+
+
+# Per-grid-cell VMEM budget for the dense kernel (bytes).  The kernel
+# holds the whole flattened row block, one weight panel and one output
+# panel per cell — fine for the paper's FC stacks, but a transformer-scale
+# matmul (e.g. an LM head) would blow the ~16 MB VMEM; those calls take
+# the explicit-fallback contract until the kernel grows row/K tiling.
+_DENSE_VMEM_BUDGET = 8 * 2**20
+
+
+def _dense_cell_bytes(rows: int, d_in: int, d_out: int, block: int,
+                      itemsize: int) -> int:
+    """Worst per-cell VMEM footprint across the three dense grids.
+
+    fwd/dwdb cells hold the row block, one (Din, block) weight panel and
+    one (rows, block) activation panel; the dx cell holds the full
+    cotangent row block plus a (Dout, it) transposed-weight panel, where
+    ``it`` is the derived Din tile (see ``dense._block_of``).
+    """
+    nt = block or d_out
+    it = block if (block and d_in % block == 0) else d_in
+    fwd = rows * d_in + d_in * nt + rows * nt
+    dx = rows * d_out + d_out * it + rows * it
+    return max(fwd, dx) * itemsize
+
+
+def dense(x, w, b=None, activation: str = "none", impl: str = "",
+          block: int | None = None):
+    """Fused dense layer: x @ w (+ b) (+ activation), paper §4.1.2.
+
+    ``x`` may carry leading batch dims — they flatten into the kernel's
+    row axis and reshape back.  The Pallas path is differentiable via
+    ``custom_vjp`` (per-block G_FC gradient tasks); ``block=None`` asks
+    the Alg. 4.2 cost model (``core.dag.choose_fc_block``) for the task
+    granularity, ``block=0`` forces one task for the whole layer.  A call
+    whose grid cell would exceed ``_DENSE_VMEM_BUDGET`` takes the
+    explicit-fallback contract.
+    """
+    explicit = impl == "pallas"
+    impl = impl or default_impl()
+    if impl == "pallas":
+        if block is None:
+            from repro.core.dag import choose_fc_block
+            block = choose_fc_block(int(w.shape[-1]))
+        rows = 1
+        for d in x.shape[:-1]:
+            rows *= int(d)
+        cell = _dense_cell_bytes(rows, int(x.shape[-1]), int(w.shape[-1]),
+                                 int(block), x.dtype.itemsize)
+        if cell <= _DENSE_VMEM_BUDGET:
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, x.shape[-1])
+            # match the ref's compute dtype (w cast to the activations')
+            out = dense_pallas(x2, w.astype(x.dtype), b,
+                               activation=activation, block=block,
+                               interpret=_interpret())
+            return out.reshape(*lead, w.shape[-1])
+        _fallback(
+            "dense",
+            f"grid cell of {cell / 2**20:.1f} MiB exceeds the "
+            f"{_DENSE_VMEM_BUDGET / 2**20:.0f} MiB VMEM budget "
+            "(kernel has no row/K tiling yet)", explicit)
+    return ref.dense_ref(x, w, b, activation=activation)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,

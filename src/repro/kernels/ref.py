@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["conv2d_ref", "max_pool2d_ref", "attention_ref", "rmsnorm_ref"]
+__all__ = ["conv2d_ref", "max_pool2d_ref", "dense_ref", "attention_ref",
+           "rmsnorm_ref"]
 
 
 def conv2d_ref(x, w, padding: str = "SAME", stride: int = 1):
@@ -40,11 +41,31 @@ def conv2d_ref(x, w, padding: str = "SAME", stride: int = 1):
 
 
 def max_pool2d_ref(x, window: int = 2, stride: int = 2):
+    """Non-overlapping window max (window == stride), NHWC.  Differentiable;
+    jax.grad splits tied maxima evenly — the contract the Pallas backward
+    kernel reproduces."""
+    if window != stride:
+        raise ValueError(
+            f"max_pool2d_ref is non-overlapping only (stride == window), "
+            f"got window={window} stride={stride}")
     B, H, W, C = x.shape
     Ho, Wo = H // stride, W // stride
     x = x[:, :Ho * stride, :Wo * stride, :]
     x = x.reshape(B, Ho, stride, Wo, stride, C)
     return x.max(axis=(2, 4))
+
+
+def dense_ref(x, w, b=None, activation: str = "none"):
+    """Fused dense oracle: x @ w (+ b) (+ activation).  Pure jnp,
+    differentiable; x may carry leading batch dims."""
+    out = x @ w.astype(x.dtype)
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out
 
 
 def attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0,

@@ -1,12 +1,15 @@
 """The paper's CNN (feature extractor + fully-connected classifier, §3.1).
 
-Configurable to the seven network scales of Table 2.  Convolutions route
-through ``models.layers.conv2d`` -> ``kernels.ops.conv2d`` with the bias +
-relu epilogue fused into the kernel (Eq. 1+2 as one pallas_call); under
-``REPRO_KERNEL_IMPL=pallas`` training runs the differentiable Pallas conv
-(custom_vjp backward kernels), under ``ref`` the jnp oracle.  The training
-objective is the paper's squared error over output neurons (Eq. 16);
-gradients via jax.grad implement Eq. 17-23 exactly.
+Configurable to the seven network scales of Table 2.  Every layer routes
+through the ``kernels.ops`` dispatch: convolutions via
+``models.layers.conv2d`` (bias + relu epilogue fused, Eq. 1+2 as one
+pallas_call), pooling via ``ops.max_pool2d`` (Eq. 15 forward / Eq. 18
+argmax-routed backward) and the classifier stack via ``models.layers.fc``
+(Eq. 19-21 per-block G_FC tasks) — so under ``REPRO_KERNEL_IMPL=pallas``
+the WHOLE forward+backward runs differentiable Pallas kernels
+(custom_vjp), and under ``ref`` the jnp oracles.  The training objective
+is the paper's squared error over output neurons (Eq. 16); gradients via
+jax.grad implement Eq. 17-23 exactly.
 """
 from __future__ import annotations
 
@@ -33,7 +36,12 @@ class CNNConfig:
     fc_layers: int = 3              # layers(FC)
     fc_neurons: int = 500           # neurons(FC)
     num_classes: int = 10
-    pool_every: int = 1             # 2x2 max-pool after every conv
+    pool_every: int = 1             # 2x2 max-pool after every k-th conv
+
+    def __post_init__(self):
+        if self.pool_every < 1:
+            raise ValueError(
+                f"pool_every must be >= 1, got {self.pool_every}")
 
 
 # Table 2 of the paper
@@ -56,11 +64,16 @@ def make_case(case: str, image_size: int = 32, num_classes: int = 10,
 
 
 def _conv_shapes(cfg: CNNConfig):
-    """Per-layer (in_ch, out_ch, spatial, pooled) with same-padding convs."""
+    """Per-layer (in_ch, out_ch, spatial, pooled) with same-padding convs.
+
+    A layer pools iff it is a ``pool_every``-th conv layer AND the feature
+    map is still >= 8 px (deep Table-2 cases can't pool every layer at
+    32 px without vanishing spatially).
+    """
     shapes = []
     size, cin = cfg.image_size, cfg.in_channels
     for i in range(cfg.conv_layers):
-        pooled = size >= 8          # stop pooling below 8 px
+        pooled = (i + 1) % cfg.pool_every == 0 and size >= 8
         shapes.append((cin, cfg.filters, size, pooled))
         if pooled:
             size //= 2
@@ -79,11 +92,7 @@ def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32):
     dims = [d_in] + [cfg.fc_neurons] * (cfg.fc_layers - 1) + [cfg.num_classes]
     for j in range(cfg.fc_layers):
         k = keys[cfg.conv_layers + j]
-        params["fc"].append({
-            "w": jax.random.normal(k, (dims[j], dims[j + 1]), dtype)
-            * jnp.sqrt(2.0 / dims[j]),
-            "b": jnp.zeros((dims[j + 1],), dtype),
-        })
+        params["fc"].append(layers.init_fc(k, dims[j], dims[j + 1], dtype))
     return params
 
 
@@ -98,9 +107,8 @@ def cnn_forward(params, images, cfg: CNNConfig):
             x = ops.max_pool2d(x, window=2, stride=2)
     x = x.reshape(x.shape[0], -1)
     for j, p in enumerate(params["fc"]):
-        x = x @ p["w"] + p["b"]
-        if j < len(params["fc"]) - 1:
-            x = jax.nn.relu(x)
+        hidden = j < len(params["fc"]) - 1
+        x = layers.fc(p, x, activation="relu" if hidden else "none")
     return x
 
 

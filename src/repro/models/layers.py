@@ -9,7 +9,7 @@ from repro.core.shardlib import constrain
 __all__ = [
     "rms_norm", "init_dense", "dense", "init_mlp", "mlp",
     "rope_frequencies", "apply_rope", "init_embedding", "embed",
-    "softcap", "init_rms_norm", "init_conv2d", "conv2d",
+    "softcap", "init_rms_norm", "init_conv2d", "conv2d", "init_fc", "fc",
 ]
 
 
@@ -60,7 +60,35 @@ def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32):
 
 
 def dense(params, x):
-    return x @ params["w"].astype(x.dtype)
+    """Bias-free projection via the kernels.ops dispatch.
+
+    Every model matmul site goes through here, so
+    ``REPRO_KERNEL_IMPL=pallas`` runs the differentiable Pallas dense
+    kernel (custom_vjp backward) and ``ref`` lowers ``x @ w`` — one
+    switch, one call site, same as ``conv2d``.
+    """
+    from repro.kernels import ops
+    return ops.dense(x, params["w"])
+
+
+def init_fc(key, d_in: int, d_out: int, dtype=jnp.float32):
+    """He-initialised full-connection layer (weight + zero bias, §4.1.2)."""
+    return {
+        "w": jax.random.normal(key, (d_in, d_out), dtype)
+        * jnp.sqrt(2.0 / d_in),
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def fc(params, x, activation: str = "none"):
+    """Full-connection layer + fused bias/activation via kernels.ops.
+
+    The CNN's classifier stack (paper §4.1.2, Eq. 19-21) routes through
+    here so the pallas impl runs the whole-layer training step — forward
+    matmul+epilogue and per-block G_FC gradient tasks — in Pallas.
+    """
+    from repro.kernels import ops
+    return ops.dense(x, params["w"], params["b"], activation=activation)
 
 
 def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):

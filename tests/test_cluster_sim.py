@@ -71,6 +71,38 @@ class TestMakespan:
         assert r.allocation.sum() == (6000 // 4) * 4
 
 
+class TestIDPAFeedbackSignal:
+    def test_agwu_feeds_charged_durations_not_fresh_rolls(self):
+        """Regression: the incremental allocation must consume the
+        durations the simulation actually charged — one noisy roll per
+        scheduled work unit, ZERO extra rolls at allocation points."""
+        m, K = 3, 4
+        sim = ClusterSim(600, np.ones(m), iterations=K, batches=2,
+                         strategy="agwu", partitioning="idpa", noise=0.5)
+        calls = []
+        orig = sim._duration
+
+        def counting(node, nsamples):
+            calls.append(node)
+            return orig(node, nsamples)
+
+        sim._duration = counting
+        res = sim.run()
+        assert res.makespan > 0
+        assert len(calls) == m * K           # exactly one roll per work unit
+
+    def test_agwu_allocation_tracks_observed_load(self):
+        """A node the sim charges as slow must end up allocated fewer
+        samples once IDPA re-partitions on the charged durations."""
+        t = np.array([1.0, 1.0, 3.0])        # node 2 is 3x slower
+        sim = ClusterSim(900, t, iterations=6, batches=3,
+                         strategy="agwu", partitioning="idpa",
+                         idpa_mode="balanced", noise=0.2, seed=2)
+        res = sim.run()
+        assert res.allocation[2] < res.allocation[0]
+        assert res.allocation[2] < res.allocation[1]
+
+
 class TestRealTraining:
     def test_weight_math_is_applied(self):
         """worker_train results actually land in the global weights."""

@@ -4,9 +4,10 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.dag import (TaskDAG, choose_oc_tile, cnn_training_dag,
-                            conv_grid_tasks, conv_layer_tasks,
-                            conv_output_shape, priority_schedule)
+from repro.core.dag import (TaskDAG, choose_fc_block, choose_oc_tile,
+                            cnn_training_dag, conv_grid_tasks,
+                            conv_layer_tasks, conv_output_shape,
+                            fc_grid_tasks, priority_schedule)
 
 
 class TestConvDecomposition:
@@ -67,6 +68,52 @@ class TestExecutedGrid:
                 conv_grid_tasks(dag, batch, cout, t)
                 return priority_schedule(dag, 8).makespan
             assert makespan(tile) <= makespan(cout) + 1e-9
+
+
+class TestFCBlockModel:
+    """G_FC at pallas-grid granularity + the choose_fc_block cost model
+    (mirrors TestExecutedGrid for the dense kernel's task list)."""
+
+    def test_grid_task_count_and_cost(self):
+        dag = TaskDAG()
+        tids = fc_grid_tasks(dag, d_out=64, block=16, cost_per_neuron=2.0)
+        assert len(tids) == 64 // 16
+        assert all(dag.tasks[t].cost == 32.0 for t in tids)
+
+    def test_grid_rejects_non_divisor(self):
+        with pytest.raises(ValueError):
+            fc_grid_tasks(TaskDAG(), d_out=64, block=5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(d_out=st.integers(1, 2048), workers=st.integers(1, 16))
+    def test_choose_block_divides_d_out(self, d_out, workers):
+        block = choose_fc_block(d_out, workers=workers)
+        assert d_out % block == 0 and block >= 1
+
+    def test_small_d_out_stays_whole(self):
+        # below min_block the MXU-lane floor keeps one task per layer
+        assert choose_fc_block(4) == 4
+        assert choose_fc_block(10) == 10     # no divisor in [8, 10)
+
+    def test_wide_fc_blocks_to_fill_workers(self):
+        # d_out=128, 8 workers: one whole-layer task = makespan 128;
+        # block 16 = 8 parallel tasks (makespan 16) — the model must split.
+        assert choose_fc_block(128, workers=8) == 16
+
+    def test_single_worker_prefers_whole_layer(self):
+        # serial makespans all equal d_out; the largest block wins the tie
+        assert choose_fc_block(512, workers=1) == 512
+
+    def test_chosen_block_schedules_no_worse_than_whole(self):
+        for d_out in (64, 500, 1000):
+            block = choose_fc_block(d_out, workers=8)
+
+            def makespan(bl):
+                dag = TaskDAG()
+                fc_grid_tasks(dag, d_out, bl)
+                return priority_schedule(dag, 8).makespan
+
+            assert makespan(block) <= makespan(d_out) + 1e-9
 
 
 class TestPriorities:

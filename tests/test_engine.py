@@ -8,6 +8,7 @@ the CI ``multidevice`` job re-runs this file under
 the matrix (device engines AND their fallbacks) executes on every PR.
 """
 import re
+import time
 from pathlib import Path
 
 import jax
@@ -356,6 +357,42 @@ class TestStreaming:
             break                            # caller walks away mid-stream
         rep = tr.train(rounds=2)             # the trainer is reusable
         assert len(rep.losses) == 2
+
+
+class TestRoundWallClock:
+    def test_stacked_round_excludes_data_prep(self, monkeypatch):
+        """Regression: the Eq. 8 wall must start AFTER the host batch draw
+        — a slow input pipeline must not inflate the virtual clock, the
+        sync-wait, or the IDPA duration feedback."""
+        tr = _make_trainer(m=2)
+        orig = tr.dataset.stacked_round_batches
+        delay = 0.2
+
+        def slow_draw(*args, **kwargs):
+            time.sleep(delay)
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(tr.dataset, "stacked_round_batches", slow_draw)
+        events = list(tr.run(2))
+        # round 1 is compile-free: its clock increment is pure compute
+        # wall and must exclude the injected data-prep delay entirely
+        increment = events[1].virtual_clock - events[0].virtual_clock
+        assert increment < delay
+
+    def test_scan_round_excludes_data_prep(self, monkeypatch):
+        tr = _make_trainer(m=1, **engine_config("scan"))
+        orig = tr.dataset.node_batch
+        delay = 0.1
+
+        def slow_draw(*args, **kwargs):
+            time.sleep(delay)
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(tr.dataset, "node_batch", slow_draw)
+        events = list(tr.run(2))
+        increment = events[1].virtual_clock - events[0].virtual_clock
+        # two local steps -> two slow draws per round, all excluded
+        assert increment < 2 * delay
 
 
 class TestEngineClasses:

@@ -187,3 +187,43 @@ class TestDecodeConsistency:
         np.testing.assert_allclose(
             got, want.astype(jnp.float32),
             atol=0.15, rtol=0.1)  # bf16 activations accumulate error
+
+
+class TestCNNShapes:
+    """Table-2 case shapes + the pool_every knob (no longer dead config)."""
+
+    @pytest.mark.parametrize("case", ["case1", "case2", "case3", "case4",
+                                      "case5", "case6", "case7"])
+    def test_table2_case_forward_shape(self, case):
+        from repro.models.cnn import cnn_forward, init_cnn, make_case
+        cfg = make_case(case)
+        params = init_cnn(jax.random.PRNGKey(0), cfg)
+        assert len(params["conv"]) == cfg.conv_layers
+        assert len(params["fc"]) == cfg.fc_layers
+        images = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
+        logits = cnn_forward(params, images, cfg)
+        assert logits.shape == (1, cfg.num_classes)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_pool_every_controls_pooling_cadence(self):
+        """pool_every=k pools after every k-th conv (while >= 8 px): the
+        classifier input size must follow the knob, not a hidden heuristic."""
+        from repro.models.cnn import CNNConfig, cnn_forward, init_cnn
+        base = dict(image_size=32, conv_layers=4, filters=4, fc_layers=1,
+                    fc_neurons=16, num_classes=10)
+        every1 = CNNConfig(name="p1", **base)                 # default
+        every2 = CNNConfig(name="p2", pool_every=2, **base)
+        # every layer: 32->16->8->4, layer 4 at 4 px skips -> d_in 4*4*4
+        p1 = init_cnn(jax.random.PRNGKey(0), every1)
+        assert p1["fc"][0]["w"].shape[0] == 4 * 4 * 4
+        # every 2nd layer: pools after conv2 (32->16) and conv4 (16->8)
+        p2 = init_cnn(jax.random.PRNGKey(0), every2)
+        assert p2["fc"][0]["w"].shape[0] == 8 * 8 * 4
+        images = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+        for cfg, params in ((every1, p1), (every2, p2)):
+            assert cnn_forward(params, images, cfg).shape == (2, 10)
+
+    def test_pool_every_must_be_positive(self):
+        from repro.models.cnn import CNNConfig
+        with pytest.raises(ValueError, match="pool_every"):
+            CNNConfig(name="bad", pool_every=0)

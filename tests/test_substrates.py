@@ -54,6 +54,19 @@ class TestData:
         b = host_batch(rows[:2])
         np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
 
+    def test_pack_sequences_short_corpus_raises_clearly(self):
+        """Regression: a corpus shorter than one row used to die inside
+        np.stack with an opaque shape error."""
+        with pytest.raises(ValueError, match="too short .* seq_len"):
+            pack_sequences(np.arange(5, dtype=np.int32), 10)
+        # boundary: exactly one row packs fine
+        rows = pack_sequences(np.arange(11, dtype=np.int32), 10)
+        assert rows.shape == (1, 11)
+
+    def test_pack_sequences_bad_seq_len_raises(self):
+        with pytest.raises(ValueError, match="seq_len"):
+            pack_sequences(np.arange(10, dtype=np.int32), 0)
+
     def test_corpus_learnable(self):
         c = lm_corpus(5000, 256, seed=0)
         assert c.min() >= 0 and c.max() < 256
