@@ -12,7 +12,12 @@ from repro.core.bpt_trainer import BPTTrainer
 from repro.core.types import TrainConfig
 from repro.data.pipeline import IDPADataset
 from repro.data.synthetic import image_dataset
+from repro.launch.runtime import maybe_enable_compilation_cache
 from repro.models.cnn import CNNConfig, cnn_accuracy, cnn_loss, init_cnn
+
+# REPRO_COMPILATION_CACHE=<dir> lets repeat benchmark runs skip compiles
+# (the measured regions all warm up first, so timings are unaffected)
+maybe_enable_compilation_cache()
 
 ROWS = []
 

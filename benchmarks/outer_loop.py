@@ -7,6 +7,11 @@ in m from dispatch alone — the synchronization overhead BPT-CNN's outer
 layer is meant to remove.  The fused path runs the whole nodes ×
 local_steps grid as ONE vmap+scan dispatch against node-stacked pytrees.
 
+With >= 8 devices the benchmark also records a 2-D hybrid-mesh row —
+the planner-driven ``(nodes=4, model=2)`` SGWU round — into the same
+CSV/JSON trajectory (data, not a gate: emulated host devices share one
+silicon, so hybrid wall time only tracks dispatch overhead here).
+
 Run:  python -m benchmarks.outer_loop [--report-only] [--json PATH]
 Emits ``name,us_per_call,derived`` CSV rows (house format) on stdout —
 pass/fail prose goes to stderr so the CSV stays machine-parseable — and
@@ -43,14 +48,18 @@ BATCH = 32
 SPEEDUP_FLOOR = 2.0          # at m = 8 (the PR 1 acceptance floor)
 
 
-def _make_trainer(m: int, engine: str, xs, ys, params, cfg) -> BPTTrainer:
-    """``engine`` is a repro.core.engine name: "sequential" or "vmap"."""
+def _make_trainer(m: int, engine: str, xs, ys, params, cfg,
+                  mesh_name: str = "") -> BPTTrainer:
+    """``engine`` is a repro.core.engine name: "sequential", "vmap" or
+    "device" (pass ``mesh_name`` to place a named — possibly 2-D hybrid
+    — mesh; the hybrid row hands the planner the model config)."""
     ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=m, batches=1)
     tc = TrainConfig(**engine_config(
         engine, outer_nodes=m, optimizer="adamw", learning_rate=2e-3,
-        total_steps=1000, warmup_steps=10, local_steps=LOCAL_STEPS, seed=0))
+        total_steps=1000, warmup_steps=10, local_steps=LOCAL_STEPS, seed=0,
+        mesh_name=mesh_name))
     return BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds, tc,
-                      batch_size=BATCH)
+                      batch_size=BATCH, model_cfg=cfg)
 
 
 def _time_rounds(trainer: BPTTrainer, rounds: int, repeats: int = 2) -> float:
@@ -65,7 +74,8 @@ def _time_rounds(trainer: BPTTrainer, rounds: int, repeats: int = 2) -> float:
 
 
 def run_all():
-    """Returns (ok, results): per-m timings + the m=8 gate verdict."""
+    """Returns (ok, results, hybrid): per-m timings, the m=8 gate
+    verdict, and the 2-D hybrid-mesh row (None under 8 devices)."""
     cfg = CNNConfig(name="outer-bench", image_size=8, conv_layers=1,
                     filters=4, fc_layers=1, fc_neurons=32)
     xs, ys = image_dataset(2048, size=8, seed=0)
@@ -85,7 +95,23 @@ def run_all():
                       "speedup": speedup}
         if m == 8 and speedup < SPEEDUP_FLOOR:
             ok = False
-    return ok, results
+
+    # 2-D hybrid-mesh row: (nodes=4, model=2) planner-driven round on 8
+    # devices (trajectory data, not a gate — emulated host devices share
+    # the same silicon, so no speedup floor is meaningful here)
+    hybrid = None
+    if len(jax.devices()) >= 8:
+        tr = _make_trainer(4, "device", xs, ys, params, cfg,
+                           mesh_name="nodes4xmodel2")
+        hyb = _time_rounds(tr, ROUNDS)
+        rep = tr.last_plan
+        family = getattr(tr.last_engine, "netplan", None)
+        family = family.family if family is not None else ""
+        emit("sgwu_round_hybrid_4x2", hyb * 1e6,
+             f"backend={rep.backend};family={family}")
+        hybrid = {"mesh": "nodes4xmodel2", "hybrid_us": hyb * 1e6,
+                  "backend": rep.backend, "family": family}
+    return ok, results, hybrid
 
 
 def main() -> None:
@@ -98,7 +124,7 @@ def main() -> None:
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    ok, results = run_all()
+    ok, results, hybrid = run_all()
     if args.json:
         doc = {
             "bench": "outer_loop",
@@ -111,6 +137,8 @@ def main() -> None:
             "pass": ok,
             "nodes": {str(m): r for m, r in results.items()},
         }
+        if hybrid is not None:
+            doc["hybrid"] = hybrid
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
             f.write("\n")

@@ -99,7 +99,9 @@ class BPTTrainer:
                  batch_size: int,
                  eval_fn: Optional[Callable] = None,   # (params) -> accuracy
                  speed_factors: Optional[Sequence[float]] = None,
-                 accuracy_weighting: str = "normalized"):
+                 accuracy_weighting: str = "normalized",
+                 model_cfg=None,
+                 plan_family: str = ""):
         # accuracy_weighting:
         #   "paper"      — Eq. (10) verbatim: scale = gamma * Q.  With small
         #     absolute accuracies early in training this under-applies local
@@ -112,6 +114,13 @@ class BPTTrainer:
         self.tc = train_cfg
         self.batch_size = batch_size
         self.eval_fn = eval_fn
+        # optional model config (e.g. CNNConfig): lets the 2-D hybrid-mesh
+        # engine plan per-layer parallelization (core.planner); without it
+        # a 2-D mesh runs the generic batch-family plan.  ``plan_family``
+        # forces a planner family ("batch"/"channel", tests & search);
+        # "" lets the cost model pick.
+        self.model_cfg = model_cfg
+        self.plan_family = plan_family
         self.m = train_cfg.outer_nodes
         self.speed = np.asarray(speed_factors if speed_factors is not None
                                 else np.ones(self.m), np.float64)
@@ -125,12 +134,32 @@ class BPTTrainer:
         self._q_ema = None
         self._eval_vmapped = None    # lazily-built vmap of eval_fn (fused)
         self.last_plan = None        # EnginePlan of the most recent run()
+        self.last_engine = None      # engine instance of the most recent run()
 
-        grad_clip = train_cfg.grad_clip
+        node_round = self._make_node_round()
+        self._train_step = jax.jit(self._make_step_body())
+        # single-node round: ONE dispatch per local round (sync baseline)
+        self._scan_round = jax.jit(node_round)
+        # fused outer layer: nodes × local_steps in ONE dispatch.  The
+        # node-stacked params/opt-state buffers are donated — each round
+        # consumes the previous round's stack instead of copying it m×.
+        self._fused_round = jax.jit(
+            jax.vmap(node_round, in_axes=(0, 0, 0, None)),
+            donate_argnums=(0, 1))
+        self._node_round = node_round
+        self._device_rounds = {}     # (mesh, plan) -> shard_mapped round
+
+    def _make_step_body(self, combine=None):
+        """One optimizer step.  ``combine`` (model-axis rounds) recombines
+        the per-shard loss/grads BEFORE clipping, so the clip sees the
+        same global norm the unsharded paths clip."""
+        grad_clip = self.tc.grad_clip
 
         def step_body(params, opt_state, batch, step):
             (loss, aux), grads = jax.value_and_grad(
                 self.loss_fn, has_aux=True)(params, batch)
+            if combine is not None:
+                loss, grads = combine(loss, grads, batch)
             if grad_clip:
                 grads, _ = clip_by_global_norm(grads, grad_clip)
             lr = self.schedule(step)
@@ -138,13 +167,18 @@ class BPTTrainer:
             params = apply_updates(params, updates)
             return params, opt_state, loss
 
-        def node_round(params, opt_state, batches, step):
-            """One node's local iteration as a lax.scan over local_steps.
+        return step_body
 
-            ``batches`` leaves are (local_steps, B, ...); ``step`` is the
-            round index, held constant across the scan exactly like the
-            sequential loop held it constant across its local steps.
-            """
+    def _make_node_round(self, combine=None):
+        """One node's local iteration as a lax.scan over local_steps.
+
+        ``batches`` leaves are (local_steps, B, ...); ``step`` is the
+        round index, held constant across the scan exactly like the
+        sequential loop held it constant across its local steps.
+        """
+        step_body = self._make_step_body(combine)
+
+        def node_round(params, opt_state, batches, step):
             def body(carry, batch):
                 params, opt_state = carry
                 params, opt_state, loss = step_body(
@@ -155,17 +189,7 @@ class BPTTrainer:
                 body, (params, opt_state), batches)
             return params, opt_state, losses[-1]
 
-        self._train_step = jax.jit(step_body)
-        # single-node round: ONE dispatch per local round (sync baseline)
-        self._scan_round = jax.jit(node_round)
-        # fused outer layer: nodes × local_steps in ONE dispatch.  The
-        # node-stacked params/opt-state buffers are donated — each round
-        # consumes the previous round's stack instead of copying it m×.
-        self._fused_round = jax.jit(
-            jax.vmap(node_round, in_axes=(0, 0, 0, None)),
-            donate_argnums=(0, 1))
-        self._node_round = node_round
-        self._device_rounds = {}     # mesh -> shard_mapped round (lazy)
+        return node_round
 
     def _q_effective(self, q: float) -> float:
         """Relative contribution weight Q (see accuracy_weighting above)."""
@@ -222,28 +246,50 @@ class BPTTrainer:
         return [max(self._eval(self._node_slice(stacked, j)), 1e-3)
                 for j in range(self.m)]
 
-    def _get_device_round(self, mesh):
+    def _get_device_round(self, mesh, netplan=None):
         """shard_map the fused round over the mesh's `nodes` axis: node
         axis = device axis, so each device runs ITS node's scan on ITS
         resident block of the stacked pytrees — no cross-device traffic
-        until the merge all-reduce.  Cached per mesh so repeated runs
-        reuse the compiled dispatch."""
-        if mesh not in self._device_rounds:
+        until the merge all-reduce.
+
+        On a 2-D ``(nodes, model)`` mesh the round executes ``netplan``
+        (``core.planner.NetworkPlan``): batches are placed with the
+        plan's ``batch_spec`` (batch family: the per-node stripe splits
+        over ``model`` too), and a batch-family plan recombines the
+        per-shard loss/grads with the exact sample-count-weighted psum
+        over ``model`` — restricted to the ``model`` axis only, so the
+        Eq. 7 merge psum stays a pure ``nodes`` collective.  Cached per
+        (mesh, plan) so repeated runs reuse the compiled dispatch."""
+        key = (mesh, netplan)
+        if key not in self._device_rounds:
             from jax.experimental.shard_map import shard_map
             P = jax.sharding.PartitionSpec
             node_round = self._node_round
+            batch_spec = P("nodes")
+            if netplan is not None and netplan.model > 1:
+                from repro.core import planner
+                batch_spec = netplan.batch_spec
+                if netplan.combine_grads:
+                    node_round = self._make_node_round(
+                        planner.grad_combine(netplan))
 
             def shard_body(stacked_w, stacked_opt, batches, step):
                 # per-device blocks keep a leading node axis (m/devices)
                 return jax.vmap(node_round, in_axes=(0, 0, 0, None))(
                     stacked_w, stacked_opt, batches, step)
 
+            # check_rep=False: pallas_call carries no replication rule
+            # (the shard_map checker rejects any kernel-impl round), and
+            # the planned 2-D body's custom-VJP collectives already
+            # encode the model-axis replication the checker would try to
+            # infer.  The equivalence suite gates the semantics instead.
             sm = shard_map(shard_body, mesh=mesh,
-                           in_specs=(P("nodes"), P("nodes"), P("nodes"),
+                           in_specs=(P("nodes"), P("nodes"), batch_spec,
                                      P()),
-                           out_specs=(P("nodes"), P("nodes"), P("nodes")))
-            self._device_rounds[mesh] = jax.jit(sm, donate_argnums=(0, 1))
-        return self._device_rounds[mesh]
+                           out_specs=(P("nodes"), P("nodes"), P("nodes")),
+                           check_rep=False)
+            self._device_rounds[key] = jax.jit(sm, donate_argnums=(0, 1))
+        return self._device_rounds[key]
 
     # ------------------------------------------------------------------
     def run(self, rounds: int,
@@ -268,6 +314,7 @@ class BPTTrainer:
         plan = resolve_engine(self.tc)
         self.last_plan = plan
         engine = plan.engine_cls(self, plan)
+        self.last_engine = engine
         eval_every = hooks.eval_every or engine.default_eval_every
         for ev in engine.events(rounds):
             n = ev.round + 1

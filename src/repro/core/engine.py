@@ -10,7 +10,8 @@ makes each substrate a first-class ``OuterEngine``:
 | ``ScanEngine``     | ``scan``     | sync baseline: one fused scan per round    |
 | ``SequentialEngine``| ``sequential``| legacy per-node Python loop (SGWU)        |
 | ``VmapEngine``     | ``vmap``     | fused vmap(nodes) x scan(local_steps)      |
-| ``ShardMapEngine`` | ``device``   | shard_map on a real ``nodes`` mesh (SGWU)  |
+| ``ShardMapEngine`` | ``device``   | shard_map on a ``nodes`` or 2-D ``(nodes,  |
+|                    |              | model)`` mesh (SGWU; planner inner layer)  |
 | ``HeapEngine``     | ``heap``     | AGWU event-ordered heap, host server       |
 | ``HeapDeviceEngine``| ``heap-device``| AGWU heap, node-pinned weights + deltas |
 
@@ -117,7 +118,9 @@ def _nodes_mesh(cfg: TrainConfig, m: int, devices):
     """The `nodes` mesh for the device-sharded outer layer, or None when
     the backend has too few devices (the transparent fallback).  A
     ``mesh_name`` whose `nodes` axis mismatches ``outer_nodes`` is a
-    config bug, not a capacity problem, and raises."""
+    config bug, not a capacity problem, and raises.  2-D hybrid meshes
+    (``nodesNxmodelK``) pass: only the ``nodes`` axis is validated here;
+    the ``model`` axis is the planner's."""
     try:
         mesh = make_mesh(cfg.mesh_name, devices=devices) if cfg.mesh_name \
             else make_nodes_mesh(m, devices=devices)
@@ -139,9 +142,11 @@ def resolve_engine(cfg: TrainConfig, devices: Optional[Sequence] = None
 
     - ``sync``: always ``ScanEngine``; rejects ``uneven_batches``.
     - ``sgwu`` + ``device_outer``: ``ShardMapEngine`` on the ``mesh_name``
-      mesh (or an auto 1-D `nodes` mesh); mesh without a matching `nodes`
-      axis raises; too few devices falls back to ``VmapEngine`` with the
-      reason recorded in ``EnginePlan.fallback``.
+      mesh (or an auto 1-D `nodes` mesh); a 2-D ``nodesNxmodelK`` mesh
+      turns on the per-layer inner planner (``core.planner``); mesh
+      without a matching `nodes` axis raises; too few devices falls back
+      to ``VmapEngine`` with the reason recorded in
+      ``EnginePlan.fallback``.
     - ``sgwu`` + ``fused_outer``: ``VmapEngine``.
     - ``sgwu`` sequential: ``SequentialEngine``; rejects
       ``uneven_batches`` (only stacked rounds realize masked stripes).
@@ -354,8 +359,24 @@ class ShardMapEngine(_StackedSGWUEngine):
     ``shard_map``, and the Eq. 7 merge is an on-device weighted
     all-reduce inside the device-resident ParameterServer — the global
     weights never funnel through host or a single device.
+
+    On a 2-D ``(nodes, model)`` mesh (the ``nodesNxmodelK`` family) the
+    engine additionally plans per-layer inner parallelism:
+    ``core.planner.plan_network`` emits a ``NetworkPlan`` whose per-layer
+    PartitionSpecs / kernel tiles the round executes under a
+    ``plan_scope`` — ``self.netplan`` holds the plan and
+    ``self.executed`` accumulates the LayerPlans the kernels actually
+    consumed, so tests can assert scheduled == executed.  Params and
+    opt state stay replicated over ``model`` (each node's K devices
+    cooperate on ITS subnetwork); the Eq. 7 merge psum remains a pure
+    ``nodes`` collective.
     """
     backend = "device"
+    netplan = None      # NetworkPlan (2-D meshes only)
+
+    def __init__(self, trainer, plan):
+        super().__init__(trainer, plan)
+        self.executed = []   # LayerPlans consumed by kernel dispatches
 
     def _build(self):
         t, mesh = self.t, self.plan.mesh
@@ -364,6 +385,27 @@ class ShardMapEngine(_StackedSGWUEngine):
             mesh, jax.sharding.PartitionSpec("nodes"))
         stacked_opt = jax.device_put(
             broadcast_tree(t.opt.init(t.params0), t.m), node_sharding)
+        if dict(mesh.shape).get("model", 1) > 1:
+            from repro.core import planner as planner_mod
+            netplan = planner_mod.plan_network(
+                t.model_cfg, mesh, batch_size=t.batch_size,
+                family=t.plan_family)
+            self.netplan = netplan
+            base = t._get_device_round(mesh, netplan)
+            engine = self
+
+            def round_fn(stacked_w, stacked_opt, batches, step):
+                # the scope is consumed at TRACE time: the first call per
+                # (mesh, plan) records the executed LayerPlans; cached
+                # re-dispatches trace nothing new (like fallback_events)
+                with planner_mod.plan_scope(netplan) as sc:
+                    out = base(stacked_w, stacked_opt, batches, step)
+                engine.executed.extend(sc.executed)
+                return out
+
+            batch_sharding = jax.sharding.NamedSharding(
+                mesh, netplan.batch_spec)
+            return server, stacked_opt, round_fn, batch_sharding
         return server, stacked_opt, t._get_device_round(mesh), node_sharding
 
 

@@ -95,7 +95,12 @@ def sgwu_merge_and_rebroadcast(stacked, accuracies):
 
 # ----------------------------------------------------------------------
 # Device-sharded Eq. (7): the node axis lives on a real mesh axis and the
-# merge is a weighted all-reduce — no device gathers the m-stack.
+# merge is a weighted all-reduce — no device gathers the m-stack.  The
+# psum is restricted to the ``nodes`` axis by name, so on a 2-D hybrid
+# ``(nodes, model)`` mesh the merge never crosses the inner-layer axis:
+# in_spec P("nodes") leaves the stack replicated over ``model`` and each
+# model replica runs the identical nodes-collective (§3 composes with §4
+# without interfering — see core.planner).
 # ----------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _sharded_merge_fn(mesh):

@@ -40,8 +40,10 @@ class ParameterServer:
     def __init__(self, init_weights, num_workers: int, mesh=None):
         # ``mesh`` switches on DEVICE-RESIDENT mode: the node-stacked
         # replica tree is placed with NamedSharding over the mesh's
-        # `nodes` axis (node j's weights on device j), the SGWU merge is
-        # an on-device weighted all-reduce, and the merged global weights
+        # `nodes` axis (node j's weights on device j; on a 2-D
+        # (nodes, model) hybrid mesh the stack simply stays replicated
+        # over `model`), the SGWU merge is an on-device weighted
+        # all-reduce restricted to `nodes`, and the merged global weights
         # stay replicated across the mesh — versions and comm-bytes are
         # tracked host-side without ever pulling the payload to host.
         self.mesh = mesh

@@ -1,0 +1,523 @@
+"""Per-layer parallelization planner for the 2-D ``(nodes, model)`` mesh.
+
+BPT-CNN composes two parallel layers: outer data parallelism across the
+m computing nodes (§3, the ``nodes`` mesh axis) and inner task
+parallelism within each subnetwork (§4).  Before this module the inner
+layer's planning lived in three places that never talked to each other —
+the Alg. 4.2 cost model (``core.dag.choose_oc_tile``/``choose_fc_block``)
+picked kernel grids, ``launch.sharding`` held path-suffix model-axis
+rules, and ``launch.hillclimb`` searched config overrides.  Following
+"Exploring Hidden Dimensions in Parallelizing CNNs" (1802.04924, the
+per-layer configuration search) and Dryden et al. (1903.06681,
+channel/batch partitioning), :func:`plan_network` unifies them: it walks
+the CNN layer by layer and emits a :class:`LayerPlan` — parallel
+dimension ∈ {batch, channel, replicate} on the ``model`` axis, the
+activation ``PartitionSpec``, and the executed kernel tile — scored by
+the same roofline terms ``launch.roofline`` charges compiled HLO with.
+
+The plan is not advisory: ``ShardMapEngine`` executes exactly what it
+says (the PR 2/5 "scheduled == executed" principle hoisted from kernel
+grids up to mesh placement).  The engine enters a :func:`plan_scope`
+around the round trace; ``kernels.ops`` consumes each layer's plan via
+:func:`take` — the tile knob feeds the Pallas grid, and a ``channel``
+fc runs Megatron-style column parallelism built from the three
+replication-aware collectives below (:func:`rep_in`, :func:`shard_dim`,
+:func:`gather_cols`), whose custom VJPs keep weight gradients exactly
+replicated across ``model``.
+
+Two executable plan families (chain-consistent end to end):
+
+- ``batch``:   every layer splits its batch over ``model`` (Dryden's
+  strong-scaling axis).  The per-shard loss/grads are recombined by the
+  exact sample-count-weighted ``psum`` of :func:`grad_combine` — an
+  equality, not an approximation, for any per-example-mean loss
+  (including the masked mean of uneven IDPA stripes).
+- ``channel``: the batch stays replicated; each fc layer independently
+  goes column-parallel over ``model`` when its width divides (1802.04924
+  picks per-layer), convs replicate.  All gradient communication is
+  induced by the collectives' transposes — no recombine step.
+
+The Eq. 7 merge never changes: its ``psum`` stays restricted to the
+``nodes`` axis (``core.gwu``), so §3 and §4 compose without interfering.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.roofline import HW
+
+__all__ = [
+    "LayerPlan", "NetworkPlan", "plan_network", "plan_for_axes",
+    "network_param_bytes", "plan_scope", "take", "current_plan",
+    "grad_combine", "rep_in", "shard_dim", "gather_cols",
+]
+
+_F32 = 4                      # bytes per element (the repro trains f32)
+_BWD_MULT = 3.0               # fwd + backward ≈ 3x forward FLOPs
+
+
+# ----------------------------------------------------------------------
+# the plan
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer's resolved parallelization on the ``model`` mesh axis.
+
+    ``parallel_dim`` is what actually executes: ``batch`` (activations
+    sharded over ``model`` on the batch dim), ``channel`` (fc columns
+    sharded, Megatron dataflow) or ``replicate`` (full compute on every
+    ``model`` device).  ``spec`` is the activation PartitionSpec inside
+    one node's step; ``tile`` is the executed kernel grid knob — the
+    conv ``oc_tile`` / dense ``block`` chosen by the Alg. 4.2 cost model
+    **on the post-sharding local shapes** (0 for pool layers, which take
+    no tile).  ``shards``/``axis`` carry the model-axis geometry the
+    executing op needs.
+    """
+    name: str                  # conv0, pool0, fc1, ...
+    kind: str                  # "conv" | "pool" | "fc"
+    parallel_dim: str          # "batch" | "channel" | "replicate"
+    spec: P                    # activation spec inside the node step
+    tile: int                  # executed kernel tile (0: no tile knob)
+    shards: int = 1            # model-axis size the plan was built for
+    axis: str = "model"
+    flops: float = 0.0         # per-device FLOPs (fwd+bwd) under the plan
+    comm_bytes: float = 0.0    # per-step model-axis collective bytes
+    cost_s: float = 0.0        # roofline seconds for this layer
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """The per-layer plans plus the mesh-facing specs the engine uses.
+
+    ``batch_spec`` is the host-stacked batch placement (leaves are
+    ``(nodes, local_steps, B, ...)``); ``param_spec`` the node-stacked
+    param/opt placement.  ``combine_grads`` says whether the round must
+    recombine per-shard grads with :func:`grad_combine` (the ``batch``
+    family) — the ``channel``/``replicate`` families keep gradients
+    replicated by construction.  Hashable: the trainer keys its compiled
+    round cache on ``(mesh, plan)``.
+    """
+    nodes: int
+    model: int
+    family: str                # "batch" | "channel" | "replicate"
+    layers: tuple              # tuple[LayerPlan, ...] in forward order
+    batch_spec: P
+    param_spec: P
+    combine_grads: bool
+    total_cost_s: float
+    axis: str = "model"
+
+
+def network_param_bytes(cfg) -> int:
+    """f32 bytes of one replica of the CNN's weights (Eq. 11 payload)."""
+    from repro.models.cnn import _conv_shapes
+    shapes, final = _conv_shapes(cfg)
+    total = 0
+    for cin, cout, _, _ in shapes:
+        total += (cfg.filter_size * cfg.filter_size * cin * cout + cout)
+    dims = [final * final * cfg.filters] + \
+        [cfg.fc_neurons] * (cfg.fc_layers - 1) + [cfg.num_classes]
+    for j in range(cfg.fc_layers):
+        total += dims[j] * dims[j + 1] + dims[j + 1]
+    return total * _F32
+
+
+# ----------------------------------------------------------------------
+# roofline scoring (the cost model candidates are ranked by)
+# ----------------------------------------------------------------------
+def _roof(flops: float, mem_bytes: float, comm_bytes: float, hw: HW) -> float:
+    return max(flops / hw.peak_flops, mem_bytes / hw.hbm_bw) \
+        + comm_bytes / hw.ici_bw
+
+
+def _allreduce_bytes(nbytes: float, k: int) -> float:
+    """Ring all-reduce wire bytes per participant for a k-way psum."""
+    return 2.0 * (k - 1) / k * nbytes if k > 1 else 0.0
+
+
+def _gather_bytes(nbytes: float, k: int) -> float:
+    """Ring all-gather wire bytes per participant (output size nbytes)."""
+    return (k - 1) / k * nbytes if k > 1 else 0.0
+
+
+def _candidate(dim: str, flops: float, mem: float, comm: float,
+               hw: HW) -> dict:
+    return {"dim": dim, "flops": flops, "comm": comm,
+            "cost": _roof(flops, mem, comm, hw)}
+
+
+def _conv_candidates(B: int, cin: int, cout: int, size: int, ksz: int,
+                     K: int, hw: HW) -> dict:
+    """Feasible model-axis parallelizations of one conv layer.
+
+    ``channel`` conv (filter partitioning with psum'd partial sums) is a
+    planned-but-not-yet-executed dimension — until the executing op grows
+    it, the planner does not offer it, keeping plan == execution honest.
+    """
+    flops = _BWD_MULT * 2.0 * B * size * size * ksz * ksz * cin * cout
+    acts = _F32 * B * size * size * (cin + cout)
+    wbytes = _F32 * (ksz * ksz * cin * cout + cout)
+    out = {"replicate": _candidate("replicate", flops, acts + wbytes, 0.0,
+                                   hw)}
+    if K > 1 and B % K == 0:
+        out["batch"] = _candidate(
+            "batch", flops / K, acts / K + wbytes,
+            _allreduce_bytes(wbytes, K), hw)
+    return out
+
+
+def _fc_candidates(B: int, d_in: int, d_out: int, K: int, hw: HW) -> dict:
+    flops = _BWD_MULT * 2.0 * B * d_in * d_out
+    a_in, a_out = _F32 * B * d_in, _F32 * B * d_out
+    wbytes = _F32 * (d_in * d_out + d_out)
+    out = {"replicate": _candidate("replicate", flops, a_in + a_out + wbytes,
+                                   0.0, hw)}
+    if K > 1 and B % K == 0:
+        out["batch"] = _candidate(
+            "batch", flops / K, (a_in + a_out) / K + wbytes,
+            _allreduce_bytes(wbytes, K), hw)
+    if K > 1 and d_out % K == 0:
+        # fwd all-gather of the column-sharded output + the transposes:
+        # dx psum (rep_in) and the zero-padded dw/db psum (shard_dim)
+        comm = _gather_bytes(a_out, K) + _allreduce_bytes(a_in, K) \
+            + _allreduce_bytes(wbytes, K)
+        out["channel"] = _candidate(
+            "channel", flops / K, a_in + (a_out + wbytes) / K, comm, hw)
+    return out
+
+
+def _pool_candidates(B: int, cout: int, size: int, K: int, hw: HW) -> dict:
+    flops = _BWD_MULT * B * size * size * cout
+    acts = _F32 * B * size * size * cout * 1.25
+    out = {"replicate": _candidate("replicate", flops, acts, 0.0, hw)}
+    if K > 1 and B % K == 0:
+        out["batch"] = _candidate("batch", flops / K, acts / K, 0.0, hw)
+    return out
+
+
+_SPEC_OF = {
+    # activation PartitionSpec inside one node's step, by parallel dim:
+    # batch-sharded rows / column-sharded features / fully replicated
+    "batch": P("model"),
+    "channel": P(None, "model"),
+    "replicate": P(),
+}
+
+
+def _walk_layers(cfg, B: int, K: int, hw: HW):
+    """-> list of (name, kind, candidates) in forward order."""
+    from repro.models.cnn import _conv_shapes
+    shapes, final = _conv_shapes(cfg)
+    walk = []
+    for i, (cin, cout, size, pooled) in enumerate(shapes):
+        walk.append((f"conv{i}", "conv", (cin, cout, size),
+                     _conv_candidates(B, cin, cout, size, cfg.filter_size,
+                                      K, hw)))
+        if pooled:
+            walk.append((f"pool{i}", "pool", (cout, size),
+                         _pool_candidates(B, cout, size, K, hw)))
+    dims = [final * final * cfg.filters] + \
+        [cfg.fc_neurons] * (cfg.fc_layers - 1) + [cfg.num_classes]
+    for j in range(cfg.fc_layers):
+        walk.append((f"fc{j}", "fc", (dims[j], dims[j + 1]),
+                     _fc_candidates(B, dims[j], dims[j + 1], K, hw)))
+    return walk
+
+
+def _tile_for(kind: str, dim: str, dims, B: int, K: int,
+              workers: int) -> int:
+    """The executed kernel tile on the plan's post-sharding local shapes —
+    the Alg. 4.2 cost model scores the grid the kernel will actually run."""
+    from repro.core.dag import choose_fc_block, choose_oc_tile
+    if kind == "conv":
+        _, cout, _ = dims
+        local_b = B // K if dim == "batch" else B
+        return choose_oc_tile(max(local_b, 1), cout, workers=workers)
+    if kind == "fc":
+        _, d_out = dims
+        local_out = d_out // K if dim == "channel" else d_out
+        return choose_fc_block(local_out, workers=workers)
+    return 0
+
+
+def plan_for_axes(cfg, *, nodes: int, model: int, batch_size: int = 32,
+                  workers: int = 8, family: str = "",
+                  hw: Optional[HW] = None) -> NetworkPlan:
+    """Plan the network for explicit ``(nodes, model)`` axis sizes.
+
+    The mesh-free core of :func:`plan_network` — also what the hillclimb
+    search loop scores candidate axis splits with (no devices needed).
+    ``family`` forces ``"batch"`` or ``"channel"`` (tests, search);
+    ``""`` picks the cheaper feasible family.  ``cfg=None`` plans the
+    generic model-agnostic batch family (no per-layer tiles) — the 2-D
+    engine's fallback when the trainer has no ``CNNConfig``.
+    """
+    hw = hw or HW()
+    K = max(int(model), 1)
+    if cfg is None:
+        if family and family != "batch":
+            raise ValueError(
+                f"family {family!r} needs a CNNConfig: only the generic "
+                "batch plan is model-agnostic")
+        if K > 1 and batch_size % K:
+            raise ValueError(
+                f"generic 2-D plan needs batch_size ({batch_size}) "
+                f"divisible by the model axis ({K}); pass the model "
+                "config for a per-layer channel/replicate plan")
+        return NetworkPlan(
+            nodes=nodes, model=K,
+            family="batch" if K > 1 else "replicate", layers=(),
+            batch_spec=P("nodes", None, "model") if K > 1 else P("nodes"),
+            param_spec=P("nodes"), combine_grads=K > 1, total_cost_s=0.0)
+
+    walk = _walk_layers(cfg, batch_size, K, hw)
+    forced = bool(family)
+
+    def assemble(fam: str):
+        """-> (assignments, total_cost) or None when infeasible."""
+        dims = []
+        total = 0.0
+        for _, kind, _, cands in walk:
+            if fam == "batch":
+                pick = cands.get("batch")
+                if pick is None:
+                    return None                  # batch % model mismatch
+            elif fam == "channel":
+                # per-layer choice (1802.04924): each fc independently
+                # column-parallel when divisible AND cheaper; the batch
+                # stays replicated so the chain needs no resharding.  A
+                # FORCED channel family goes column-parallel wherever
+                # divisible — the caller (test/search) demanded the
+                # dimension, not the cost ranking.
+                pick = cands["replicate"]
+                ch = cands.get("channel")
+                if kind == "fc" and ch is not None \
+                        and (forced or ch["cost"] < pick["cost"]):
+                    pick = ch
+            else:
+                pick = cands["replicate"]
+            dims.append(pick)
+            total += pick["cost"]
+        return dims, total
+
+    if K == 1:
+        family = family or "replicate"
+    choices = {}
+    for fam in ([family] if family else ["batch", "channel"]):
+        got = assemble(fam)
+        if got is None:
+            if family:
+                raise ValueError(
+                    f"family 'batch' infeasible: batch_size "
+                    f"({batch_size}) does not divide over the model "
+                    f"axis ({K})")
+            continue
+        choices[fam] = got
+    if not choices:
+        raise ValueError("no feasible plan family")
+    fam = min(choices, key=lambda f: choices[f][1])
+    picks, total = choices[fam]
+
+    layer_plans = []
+    for (name, kind, dims, _), pick in zip(walk, picks):
+        layer_plans.append(LayerPlan(
+            name=name, kind=kind, parallel_dim=pick["dim"],
+            spec=_SPEC_OF[pick["dim"]],
+            tile=_tile_for(kind, pick["dim"], dims, batch_size, K, workers),
+            shards=K, flops=pick["flops"], comm_bytes=pick["comm"],
+            cost_s=pick["cost"]))
+
+    sharded_batch = fam == "batch" and K > 1
+    return NetworkPlan(
+        nodes=nodes, model=K, family=fam, layers=tuple(layer_plans),
+        batch_spec=P("nodes", None, "model") if sharded_batch
+        else P("nodes"),
+        param_spec=P("nodes"), combine_grads=sharded_batch,
+        total_cost_s=total)
+
+
+def plan_network(cfg, mesh, batch_size: int = 32, workers: int = 8,
+                 family: str = "") -> NetworkPlan:
+    """Per-layer parallelization plan for a concrete mesh.
+
+    ``cfg`` is the ``CNNConfig`` (or None for the generic batch plan);
+    ``mesh`` any mesh with a ``nodes`` axis — a ``model`` axis switches
+    the inner layer on, its absence degrades to the 1-D outer layer.
+    The returned specs and tiles are exactly what ``ShardMapEngine``
+    executes (asserted by the planner tests).
+    """
+    shape = dict(mesh.shape)
+    return plan_for_axes(cfg, nodes=shape.get("nodes", 1),
+                         model=shape.get("model", 1),
+                         batch_size=batch_size, workers=workers,
+                         family=family)
+
+
+# ----------------------------------------------------------------------
+# plan scope: how the executing ops consume the plan at trace time
+# ----------------------------------------------------------------------
+class _PlanScope:
+    """Trace-time cursor over a plan's layers, per kind.
+
+    ``cnn_forward`` calls its conv/fc ops in a fixed order; each
+    ``take`` hands the next same-kind LayerPlan to the executing op and
+    records it in ``executed`` — the log the "scheduled == executed"
+    tests compare against the plan.  Counters wrap per kind, so every
+    full forward traversal (loss fwd, a separate eval trace) realigns.
+    """
+
+    def __init__(self, plan: NetworkPlan):
+        self.plan = plan
+        self._by_kind: dict = {}
+        for lp in plan.layers:
+            self._by_kind.setdefault(lp.kind, []).append(lp)
+        self._cursor = {k: 0 for k in self._by_kind}
+        self.executed: list = []
+
+    def take(self, kind: str) -> Optional[LayerPlan]:
+        seq = self._by_kind.get(kind)
+        if not seq:
+            return None
+        i = self._cursor[kind]
+        self._cursor[kind] = (i + 1) % len(seq)
+        lp = seq[i]
+        self.executed.append(lp)
+        return lp
+
+
+_SCOPES: list = []
+
+
+@contextlib.contextmanager
+def plan_scope(plan: NetworkPlan):
+    """Install ``plan`` for ops traced in this block (re-entrant)."""
+    sc = _PlanScope(plan)
+    _SCOPES.append(sc)
+    try:
+        yield sc
+    finally:
+        _SCOPES.pop()
+
+
+def take(kind: str) -> Optional[LayerPlan]:
+    """The executing op's hook: the next ``kind`` LayerPlan, or None
+    when no plan scope is active (every non-planned path)."""
+    return _SCOPES[-1].take(kind) if _SCOPES else None
+
+
+def current_plan() -> Optional[NetworkPlan]:
+    return _SCOPES[-1].plan if _SCOPES else None
+
+
+# ----------------------------------------------------------------------
+# batch family: exact per-shard loss/grad recombination over `model`
+# ----------------------------------------------------------------------
+def grad_combine(plan: NetworkPlan):
+    """The model-axis recombiner for batch-family rounds.
+
+    Each shard computes its loss/grads on ``B/K`` samples; weighting by
+    the shard's (mask-aware) sample count and ``psum``-ing over ``model``
+    reproduces the full-batch mean gradient EXACTLY — for the plain mean
+    and for the masked mean of uneven stripes (grad of ``Σlm/Σm``
+    decomposes as ``psum(M_s·g_s)/psum(M_s)``).  Runs inside the round's
+    ``shard_map`` body, before gradient clipping, so clipping sees the
+    same global norm the 1-D paths clip.
+    """
+    axis = plan.axis
+
+    def combine(loss, grads, batch):
+        mask = batch.get("mask") if isinstance(batch, dict) else None
+        if mask is not None:
+            w = jnp.sum(mask.astype(jnp.float32))
+        else:
+            leaf = jax.tree_util.tree_leaves(batch)[0]
+            w = jnp.asarray(float(leaf.shape[0]), jnp.float32)
+        share = w / jnp.maximum(jax.lax.psum(w, axis), 1.0)
+        loss = jax.lax.psum(loss * share, axis)
+        grads = jax.tree_util.tree_map(
+            lambda g: jax.lax.psum(g * share.astype(g.dtype), axis), grads)
+        return loss, grads
+
+    return combine
+
+
+# ----------------------------------------------------------------------
+# channel family: replication-aware collectives (Megatron dataflow)
+# ----------------------------------------------------------------------
+# Plain autodiff through shard_map collectives double-counts replicated
+# values: all_gather's transpose psum-scatters K identical cotangents
+# (a K× factor), and a sliced weight's transpose leaves each device a
+# zero-padded partial dw (model-divergent updates).  These three
+# custom-VJP helpers encode the replication the checker can't see —
+# together they make the column-parallel fc gradient bit-exact against
+# the unsharded layer.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def rep_in(x, axis_name: str):
+    """Identity on a model-replicated input; the backward ``psum``s the
+    per-shard partial cotangents into the full (replicated) one."""
+    return x
+
+
+def _rep_in_fwd(x, axis_name):
+    return x, None
+
+
+def _rep_in_bwd(axis_name, _, g):
+    return (jax.lax.psum(g, axis_name),)
+
+
+rep_in.defvjp(_rep_in_fwd, _rep_in_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def shard_dim(x, num_shards: int, full: int, axis_name: str):
+    """This device's block of ``x``'s last dim (``full`` static for the
+    backward's zero-pad).  The backward ``psum``s the disjoint padded
+    blocks, so the weight cotangent comes back full AND replicated."""
+    idx = jax.lax.axis_index(axis_name)
+    blk = full // num_shards
+    return jax.lax.dynamic_slice_in_dim(x, idx * blk, blk, axis=-1)
+
+
+def _shard_dim_fwd(x, num_shards, full, axis_name):
+    return shard_dim(x, num_shards, full, axis_name), None
+
+
+def _shard_dim_bwd(num_shards, full, axis_name, _, g):
+    idx = jax.lax.axis_index(axis_name)
+    blk = full // num_shards
+    pad = jnp.zeros(g.shape[:-1] + (full,), g.dtype)
+    pad = jax.lax.dynamic_update_slice_in_dim(pad, g, idx * blk, axis=-1)
+    return (jax.lax.psum(pad, axis_name),)
+
+
+shard_dim.defvjp(_shard_dim_fwd, _shard_dim_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def gather_cols(y, num_shards: int, axis_name: str):
+    """All-gather column shards into the full (replicated) activation;
+    the backward takes the local slice of the replicated cotangent
+    instead of psum-scattering K identical copies (the K× trap)."""
+    return jax.lax.all_gather(y, axis_name, axis=y.ndim - 1, tiled=True)
+
+
+def _gather_cols_fwd(y, num_shards, axis_name):
+    return gather_cols(y, num_shards, axis_name), None
+
+
+def _gather_cols_bwd(num_shards, axis_name, _, g):
+    idx = jax.lax.axis_index(axis_name)
+    blk = g.shape[-1] // num_shards
+    return (jax.lax.dynamic_slice_in_dim(g, idx * blk, blk, axis=-1),)
+
+
+gather_cols.defvjp(_gather_cols_fwd, _gather_cols_bwd)

@@ -166,7 +166,9 @@ class TrainConfig:
     device_outer: bool = False
     # Named mesh from launch.mesh.MESHES to place the node axis on ("" =
     # auto 1-D `nodes` mesh over the first ``outer_nodes`` devices).  The
-    # mesh must expose a `nodes` axis of size ``outer_nodes``.
+    # mesh must expose a `nodes` axis of size ``outer_nodes``.  A 2-D
+    # `nodesNxmodelK` hybrid mesh additionally turns on the per-layer
+    # inner-parallelism planner (core.planner) over the `model` axis.
     mesh_name: str = ""
     # IDPA heterogeneity in the round data: per-node effective batch sizes
     # proportional to the current allocation, realized as padded+masked

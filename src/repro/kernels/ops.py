@@ -28,6 +28,15 @@ Default task granularities come from ``core.dag``'s Alg. 4.2 cost model —
 ``conv2d``'s ``oc_tile`` from ``choose_oc_tile`` and ``dense``'s ``block``
 from ``choose_fc_block`` — so the paper's task decomposition and the
 executed Pallas grids stay one concept.
+
+**Planner hook**: inside an active ``core.planner.plan_scope`` (the 2-D
+``(nodes, model)`` rounds of ``ShardMapEngine``) the tile knobs come from
+the per-layer ``LayerPlan`` instead — the plan's tiles were chosen by the
+same Alg. 4.2 model on the post-sharding LOCAL shapes, so scheduled and
+executed grids stay one concept under the hybrid mesh too.  A ``channel``
+fc plan additionally reroutes ``dense`` through the Megatron column-
+parallel dataflow (``rep_in``/``shard_dim``/``gather_cols``).  With no
+scope active (every 1-D / fused / eval path) behavior is unchanged.
 """
 from __future__ import annotations
 
@@ -99,6 +108,12 @@ def clear_fallback_log() -> None:
     _FALLBACKS.clear()
 
 
+def _plan_take(kind: str):
+    """The active LayerPlan for the next ``kind`` call, or None."""
+    from repro.core import planner
+    return planner.take(kind)
+
+
 # ----------------------------------------------------------------------
 # dispatch wrappers
 # ----------------------------------------------------------------------
@@ -113,6 +128,10 @@ def conv2d(x, w, b=None, padding: str = "SAME", stride: int = 1,
     call under pallas takes the explicit-fallback contract (the paper's
     CNNs pool instead of striding, so the kernel is stride-1 only).
     """
+    if oc_tile is None:
+        lp = _plan_take("conv")
+        if lp is not None:
+            oc_tile = lp.tile
     explicit = impl == "pallas"
     impl = impl or default_impl()
     if impl == "pallas":
@@ -192,7 +211,28 @@ def dense(x, w, b=None, activation: str = "none", impl: str = "",
     granularity, ``block=0`` forces one task for the whole layer.  A call
     whose grid cell would exceed ``_DENSE_VMEM_BUDGET`` takes the
     explicit-fallback contract.
+
+    Under an active plan scope a ``channel``-parallel LayerPlan reroutes
+    the call through the Megatron column dataflow: the weight/bias shard
+    for this device's ``model`` index, the kernel on the local block
+    (with the plan's LOCAL-shape tile), and a replication-aware
+    all-gather back to the full activation — gradients stay exactly
+    replicated across ``model`` via the collectives' custom VJPs.
     """
+    if block is None:
+        lp = _plan_take("fc")
+        if lp is not None:
+            block = lp.tile
+            if lp.parallel_dim == "channel":
+                from repro.core import planner
+                full = int(w.shape[-1])
+                xr = planner.rep_in(x, lp.axis)
+                ws = planner.shard_dim(w, lp.shards, full, lp.axis)
+                bs = planner.shard_dim(b, lp.shards, full, lp.axis) \
+                    if b is not None else None
+                out = dense(xr, ws, bs, activation=activation, impl=impl,
+                            block=block)
+                return planner.gather_cols(out, lp.shards, lp.axis)
     explicit = impl == "pallas"
     impl = impl or default_impl()
     if impl == "pallas":

@@ -1,19 +1,33 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf-hillclimb driver: a thin search loop over planner candidates.
 
-"""Perf-hillclimb driver: evaluate one (arch x shape x mesh) with config
-overrides and print/record the roofline row.
+Two modes, both scored by the same roofline terms:
 
-    PYTHONPATH=src python -m repro.launch.hillclimb --arch gemma2-27b \
-        --shape train_4k --mesh pod --tag hc1a \
-        --set bf16_params_compute=True --set mlp_megatron=True
+* override mode (the historical driver): evaluate one (arch x shape x
+  mesh) with ModelConfig overrides and print/record the roofline row.
+
+      PYTHONPATH=src python -m repro.launch.hillclimb --arch gemma2-27b \
+          --shape train_4k --mesh pod --tag hc1a \
+          --set bf16_params_compute=True --set mlp_megatron=True
+
+* plan mode (the CNN's 2-D hybrid mesh): enumerate ``(nodes, model)``
+  axis splits of the device budget, score each with
+  ``core.planner.plan_for_axes`` (per-layer inner cost) plus the Eq. 7
+  merge all-reduce amortized over the local steps, and print the ranked
+  candidates.  The search IS the planner — this loop owns no cost model
+  of its own.
+
+      PYTHONPATH=src python -m repro.launch.hillclimb --plan \
+          --cnn case1 --devices 8 --batch-size 32
+
+XLA_FLAGS is only touched under ``__main__`` (never on import), and any
+pre-existing value is appended to, not clobbered.
 """
+from __future__ import annotations
+
 import argparse
 import dataclasses
 import json
-
-from repro import configs
-from repro.launch import dryrun
+import os
 
 
 def parse_value(v: str):
@@ -29,18 +43,93 @@ def parse_value(v: str):
         return v
 
 
+def _axis_splits(budget: int):
+    """Power-of-2 ``(nodes, model)`` splits fitting the device budget."""
+    out = []
+    n = 1
+    while n <= budget:
+        k = 1
+        while n * k <= budget:
+            out.append((n, k))
+            k *= 2
+        n *= 2
+    return out
+
+
+def plan_search(cnn: str, devices: int, batch_size: int,
+                local_steps: int = 2) -> list[dict]:
+    """Rank hybrid-mesh candidates for a CNN config by total round cost.
+
+    Per candidate: the planner's per-layer inner cost (already / model
+    shards), plus the ring all-reduce of one weight replica over
+    ``nodes`` (the Eq. 7 merge) amortized over the local steps.  Ranked
+    by cost per GLOBAL sample — a step processes ``nodes * B`` samples,
+    so outer data parallelism's throughput counts against its merge
+    traffic instead of every split losing to (1, 1).
+    """
+    from repro.core import planner
+    from repro.launch.roofline import HW
+    from repro.models.cnn import make_case
+
+    cfg = make_case(cnn)
+    hw = HW()
+    rows = []
+    for nodes, model in _axis_splits(devices):
+        try:
+            plan = planner.plan_for_axes(cfg, nodes=nodes, model=model,
+                                         batch_size=batch_size)
+        except ValueError:
+            continue
+        wbytes = planner.network_param_bytes(cfg)
+        merge = 2.0 * (nodes - 1) / nodes * wbytes / hw.ici_bw \
+            if nodes > 1 else 0.0
+        cost = plan.total_cost_s + merge / max(local_steps, 1)
+        rows.append({
+            "nodes": nodes, "model": model, "family": plan.family,
+            "inner_cost_s": plan.total_cost_s,
+            "merge_cost_s_per_step": merge / max(local_steps, 1),
+            "step_cost_s": cost,
+            "cost_per_sample_s": cost / (nodes * batch_size),
+            "layers": [{"name": lp.name, "dim": lp.parallel_dim,
+                        "tile": lp.tile} for lp in plan.layers],
+        })
+    rows.sort(key=lambda r: r["cost_per_sample_s"])
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--plan", action="store_true",
+                    help="rank (nodes, model) hybrid-mesh splits for a CNN")
+    ap.add_argument("--cnn", default="case1",
+                    help="Table 2 case name (plan mode)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="device budget to split (plan mode)")
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--mesh", default="pod")
-    ap.add_argument("--tag", required=True)
+    ap.add_argument("--tag")
     ap.add_argument("--variant", default="")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--set", action="append", default=[],
                     metavar="KEY=VALUE", help="ModelConfig overrides")
     args = ap.parse_args(argv)
 
+    if args.plan:
+        rows = plan_search(args.cnn, args.devices, args.batch_size,
+                           args.local_steps)
+        print(f"[hillclimb:plan] {args.cnn} over {args.devices} devices "
+              f"B={args.batch_size}")
+        print(json.dumps(rows, indent=1))
+        return
+
+    if not (args.arch and args.shape and args.tag):
+        ap.error("override mode needs --arch, --shape and --tag "
+                 "(or use --plan)")
+    from repro import configs
+    from repro.launch import dryrun
     cfg = configs.get_config(args.arch, args.variant)
     overrides = {}
     for kv in args.set:
@@ -60,4 +149,11 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
+    # append, never clobber, and only when the caller didn't already
+    # force a device count — and only under __main__, so importing this
+    # module can't poison another process's XLA options
+    _flag = "--xla_force_host_platform_device_count=512"
+    _prev = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _prev:
+        os.environ["XLA_FLAGS"] = (_prev + " " + _flag).strip()
     main()

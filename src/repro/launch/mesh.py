@@ -11,7 +11,7 @@ import math
 import jax
 
 __all__ = ["make_production_mesh", "make_mesh", "make_nodes_mesh",
-           "data_axes", "MESHES"]
+           "make_hybrid_mesh", "data_axes", "MESHES"]
 
 MESHES = {
     "pod": ((16, 16), ("data", "model")),               # 256 chips (v5e pod)
@@ -25,6 +25,14 @@ MESHES = {
     "nodes4": ((4,), ("nodes",)),
     "nodes8": ((8,), ("nodes",)),
     "nodes16": ((16,), ("nodes",)),
+    # `nodesNxmodelK` family: 2-D hybrid meshes — the paper's outer data
+    # parallelism on `nodes` (§3, Eq. 7 psum restricted to this axis)
+    # composed with per-layer inner parallelism on `model` (§4 via
+    # core.planner).  K devices per computing node.
+    "nodes2xmodel2": ((2, 2), ("nodes", "model")),
+    "nodes4xmodel2": ((4, 2), ("nodes", "model")),
+    "nodes2xmodel4": ((2, 4), ("nodes", "model")),
+    "nodes8xmodel2": ((8, 2), ("nodes", "model")),
 }
 
 
@@ -60,6 +68,31 @@ def make_nodes_mesh(num_nodes: int, devices=None):
             "emulate a multi-device host)")
     import numpy as np
     return jax.sharding.Mesh(np.asarray(pool[:num_nodes]), ("nodes",))
+
+
+def make_hybrid_mesh(num_nodes: int, model_parallel: int, devices=None):
+    """2-D ``(nodes, model)`` hybrid mesh for arbitrary axis sizes.
+
+    The ``nodesNxmodelK`` MESHES entries are the documented members of
+    the family; this builds the same shape for any ``(N, K)``.  Each of
+    the paper's m computing nodes owns ``model_parallel`` devices for
+    the planner-driven inner layer.  Raises RuntimeError when the
+    backend pool is too small (callers fall back like ``make_nodes_mesh``).
+    """
+    if num_nodes < 1 or model_parallel < 1:
+        raise ValueError("need at least one node and one model shard")
+    need = num_nodes * model_parallel
+    pool = list(jax.devices() if devices is None else devices)
+    if len(pool) < need:
+        raise RuntimeError(
+            f"hybrid mesh needs {need} devices "
+            f"({num_nodes} nodes x {model_parallel} model), have "
+            f"{len(pool)} (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count to emulate)")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(pool[:need]).reshape(num_nodes, model_parallel),
+        ("nodes", "model"))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,32 @@
+"""Process-level runtime knobs shared by drivers and benchmarks.
+
+Currently one knob: the persistent XLA compilation cache.  Setting
+``REPRO_COMPILATION_CACHE=<dir>`` makes repeat runs of the same driver /
+benchmark skip recompiles entirely (the ROADMAP perf-flywheel item) —
+identical HLO hits the on-disk cache instead of XLA.  Off by default:
+tests and one-shot runs keep their hermetic no-cache behavior.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["maybe_enable_compilation_cache"]
+
+
+def maybe_enable_compilation_cache() -> str:
+    """Enable jax's persistent compilation cache when the env knob is set.
+
+    Returns the cache directory actually enabled ("" when the knob is
+    unset).  Safe to call more than once and before/after other jax work;
+    the directory is created if missing.
+    """
+    path = os.environ.get("REPRO_COMPILATION_CACHE", "")
+    if not path:
+        return ""
+    from jax.experimental.compilation_cache import compilation_cache as cc
+    os.makedirs(path, exist_ok=True)
+    if hasattr(cc, "set_cache_dir"):
+        cc.set_cache_dir(path)
+    else:                       # older jax spelling
+        cc.initialize_cache(path)
+    return path

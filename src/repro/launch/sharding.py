@@ -14,6 +14,12 @@ Conventions (leading layer axis from the scan stack is never sharded):
   * mamba mixer            : replicated (see DESIGN.md: fused in-proj layout
     boundaries don't align with a 16-way split; hillclimb candidate)
   * norms / scalars        : replicated
+
+These static suffix rules serve the transformer/LLM stacks.  For the
+paper's CNN on the 2-D ``(nodes, model)`` hybrid mesh, the per-layer
+parallelization is planned by ``core.planner`` instead — a cost-model
+search over {batch, channel, replicate} per layer that emits the specs
+AND the kernel tiles the round executes (plan == execution).
 """
 from __future__ import annotations
 

@@ -32,6 +32,7 @@ from repro.core.engine import ENGINES, engine_config
 from repro.core.types import TrainConfig
 from repro.data.pipeline import IDPADataset, host_batch, pack_sequences
 from repro.data.synthetic import lm_corpus
+from repro.launch import runtime
 from repro.models import lm
 from repro.models.frontends import random_frontend_embeds
 
@@ -77,6 +78,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    cache_dir = runtime.maybe_enable_compilation_cache()
+    if cache_dir:
+        print(f"[train] compilation cache: {cache_dir}")
 
     cfg = configs.get_reduced(args.arch) if args.reduced \
         else configs.get_config(args.arch)

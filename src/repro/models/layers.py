@@ -86,6 +86,9 @@ def fc(params, x, activation: str = "none"):
     The CNN's classifier stack (paper §4.1.2, Eq. 19-21) routes through
     here so the pallas impl runs the whole-layer training step — forward
     matmul+epilogue and per-block G_FC gradient tasks — in Pallas.
+    Inside a ``core.planner`` plan scope (2-D hybrid-mesh rounds) the
+    dispatch also takes the layer's planned tile / channel-parallel
+    dataflow from the active ``LayerPlan`` — see ``kernels.ops.dense``.
     """
     from repro.kernels import ops
     return ops.dense(x, params["w"], params["b"], activation=activation)

@@ -33,11 +33,14 @@ def need_devices(m):
 
 
 def _run_sgwu(m: int, *, device: bool, uneven: bool = False, rounds: int = 3,
-              hetero: bool = False):
+              hetero: bool = False, mesh_name: str = "",
+              plan_family: str = ""):
     """One SGWU run on a fixed seed; batches=1 freezes the IDPA allocation
     so both paths see identical data regardless of wall time.  ``hetero``
     gives the nodes a frequency gradient, so the frozen first-batch
-    allocation (Eq. 2) — and with it the uneven stripe sizes — differ."""
+    allocation (Eq. 2) — and with it the uneven stripe sizes — differ.
+    ``mesh_name`` names a MESHES entry (a 2-D ``nodesNxmodelK`` entry
+    turns on the per-layer planner; ``plan_family`` forces its family)."""
     cfg = CNNConfig(name="equiv", image_size=8, conv_layers=1, filters=4,
                     fc_layers=1, fc_neurons=32)
     xs, ys = image_dataset(64 * m * 2, size=8, seed=0)
@@ -48,9 +51,10 @@ def _run_sgwu(m: int, *, device: bool, uneven: bool = False, rounds: int = 3,
     tc = TrainConfig(outer_strategy="sgwu", outer_nodes=m,
                      optimizer="adamw", learning_rate=2e-3,
                      total_steps=100, warmup_steps=5, local_steps=2,
-                     seed=0, device_outer=device, uneven_batches=uneven)
+                     seed=0, device_outer=device, uneven_batches=uneven,
+                     mesh_name=mesh_name)
     tr = BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds, tc,
-                    batch_size=32)
+                    batch_size=32, model_cfg=cfg, plan_family=plan_family)
     return tr.train(rounds=rounds)
 
 
@@ -99,6 +103,54 @@ class TestDeviceVmapEquivalence:
             assert isinstance(leaf, jax.Array)
             assert leaf.sharding.is_fully_replicated
             assert len(leaf.sharding.device_set) == 2
+
+
+class TestHybridMeshEquivalence:
+    """2-D hybrid-mesh SGWU ≡ 1-D device outer ≡ fused vmap (the planner
+    PR's acceptance bar): the per-layer inner parallelism over `model`
+    must not move the training trajectory at all — the batch family's
+    weighted psum recombine and the channel family's collective
+    transposes are exact, not approximate."""
+
+    @need_devices(8)
+    def test_4x2_matches_1d_and_vmap(self):
+        """The ISSUE's named contract: (nodes=4, model=2) on 8 devices."""
+        from repro.kernels import ops
+        ops.clear_fallback_log()
+        hyb = _run_sgwu(4, device=True, mesh_name="nodes4xmodel2",
+                        rounds=4)
+        dev = _run_sgwu(4, device=True, rounds=4)
+        ref = _run_sgwu(4, device=False, rounds=4)
+        assert hyb.backend == "device" and dev.backend == "device"
+        assert ref.backend == "vmap"
+        _assert_reports_close(hyb, dev)
+        _assert_reports_close(hyb, ref)
+        if ops.default_impl() == "pallas":
+            # the all-Pallas contract extends to the hybrid rounds
+            assert ops.fallback_events() == {}
+
+    @need_devices(8)
+    def test_4x2_uneven_masked_stripes(self):
+        """Masked stripes recombine exactly too: grad of Σlm/Σm is
+        psum(M_s·g_s)/psum(M_s), which grad_combine implements."""
+        hyb = _run_sgwu(4, device=True, mesh_name="nodes4xmodel2",
+                        uneven=True, hetero=True)
+        ref = _run_sgwu(4, device=False, uneven=True, hetero=True)
+        _assert_reports_close(hyb, ref)
+
+    @need_devices(8)
+    def test_4x2_channel_family(self):
+        """Forced column-parallel fc (Megatron dataflow) ≡ vmap."""
+        hyb = _run_sgwu(4, device=True, mesh_name="nodes4xmodel2",
+                        plan_family="channel")
+        ref = _run_sgwu(4, device=False)
+        _assert_reports_close(hyb, ref)
+
+    @need_devices(4)
+    def test_2x2_matches_vmap(self):
+        hyb = _run_sgwu(2, device=True, mesh_name="nodes2xmodel2")
+        ref = _run_sgwu(2, device=False)
+        _assert_reports_close(hyb, ref)
 
 
 class TestFallback:

@@ -1,0 +1,108 @@
+"""launch.mesh invariants: the MESHES table, builders and axis helpers.
+
+Runs on any device count — entries that need more devices than the host
+has assert the RuntimeError contract instead.
+"""
+import math
+
+import jax
+import pytest
+
+from repro.launch.mesh import (MESHES, data_axes, make_hybrid_mesh,
+                               make_mesh, make_nodes_mesh)
+
+NDEV = len(jax.devices())
+
+
+class TestMeshesTable:
+    def test_shapes_match_axes(self):
+        for name, (shape, axes) in MESHES.items():
+            assert len(shape) == len(axes), name
+            assert all(s >= 1 for s in shape), name
+            assert len(set(axes)) == len(axes), name     # axes are unique
+
+    def test_nodes_family(self):
+        for m in (2, 4, 8, 16):
+            shape, axes = MESHES[f"nodes{m}"]
+            assert shape == (m,) and axes == ("nodes",)
+
+    def test_hybrid_family(self):
+        """Every nodesNxmodelK entry is (N, K) over ('nodes', 'model')."""
+        hybrids = {n: v for n, v in MESHES.items()
+                   if n.startswith("nodes") and "xmodel" in n}
+        assert set(hybrids) >= {"nodes2xmodel2", "nodes4xmodel2",
+                                "nodes2xmodel4", "nodes8xmodel2"}
+        for name, (shape, axes) in hybrids.items():
+            n, k = name.removeprefix("nodes").split("xmodel")
+            assert shape == (int(n), int(k)), name
+            assert axes == ("nodes", "model"), name
+
+    def test_model_axis_present_where_expected(self):
+        for name in ("pod", "multipod", "tiny", "tiny3d"):
+            _, axes = MESHES[name]
+            assert "model" in axes
+
+
+class TestMakeMesh:
+    def test_builds_when_devices_suffice(self):
+        eligible = [n for n, (s, _) in MESHES.items()
+                    if math.prod(s) <= NDEV]
+        if not eligible:         # single-device tier-1 run
+            pytest.skip("no MESHES entry fits this device count")
+        for name in eligible:
+            mesh = make_mesh(name)
+            shape, axes = MESHES[name]
+            assert mesh.axis_names == axes
+            assert tuple(mesh.shape[a] for a in axes) == shape
+
+    def test_insufficient_devices_raise(self):
+        too_big = [n for n, (s, _) in MESHES.items()
+                   if math.prod(s) > NDEV]
+        for name in too_big:
+            with pytest.raises(RuntimeError, match="devices"):
+                make_mesh(name)
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(KeyError):
+            make_mesh("nope")
+
+
+class TestHybridBuilder:
+    def test_bad_counts(self):
+        with pytest.raises(ValueError):
+            make_hybrid_mesh(0, 2)
+        with pytest.raises(ValueError):
+            make_hybrid_mesh(2, 0)
+
+    def test_too_few_devices(self):
+        with pytest.raises(RuntimeError, match="hybrid mesh"):
+            make_hybrid_mesh(NDEV + 1, 2)
+
+    @pytest.mark.skipif(NDEV < 4, reason="needs 4 devices")
+    def test_builds_2x2(self):
+        mesh = make_hybrid_mesh(2, 2)
+        assert mesh.axis_names == ("nodes", "model")
+        assert dict(mesh.shape) == {"nodes": 2, "model": 2}
+
+    @pytest.mark.skipif(NDEV < 2, reason="needs 2 devices")
+    def test_named_entry_matches_builder(self):
+        if NDEV < 4:
+            pytest.skip("needs 4 devices")
+        named = make_mesh("nodes2xmodel2")
+        built = make_hybrid_mesh(2, 2)
+        assert dict(named.shape) == dict(built.shape)
+        assert named.axis_names == built.axis_names
+
+
+class TestDataAxes:
+    @pytest.mark.skipif(NDEV < 1, reason="needs a device")
+    def test_nodes_mesh_has_no_data_axes(self):
+        assert data_axes(make_nodes_mesh(1)) == ()
+
+    @pytest.mark.skipif(NDEV < 4, reason="needs 4 devices")
+    def test_tiny_mesh(self):
+        assert data_axes(make_mesh("tiny")) == ("data",)
+
+    @pytest.mark.skipif(NDEV < 8, reason="needs 8 devices")
+    def test_tiny3d_mesh(self):
+        assert data_axes(make_mesh("tiny3d")) == ("pod", "data")

@@ -1,0 +1,288 @@
+"""core.planner: the per-layer parallelization planner for hybrid meshes.
+
+Unit tests run on any device count (plans are mesh-shape functions); the
+"scheduled == executed" engine assertions need forced host devices and
+skip otherwise (the CI multidevice job runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import planner
+from repro.core.bpt_trainer import BPTTrainer
+from repro.core.dag import choose_fc_block, choose_oc_tile
+from repro.core.types import TrainConfig
+from repro.data.pipeline import IDPADataset
+from repro.data.synthetic import image_dataset
+from repro.launch.mesh import make_hybrid_mesh, make_nodes_mesh
+from repro.models.cnn import CNNConfig, cnn_loss, init_cnn
+
+NDEV = len(jax.devices())
+
+
+def need_devices(m):
+    return pytest.mark.skipif(
+        NDEV < m, reason=f"needs {m} devices (have {NDEV}); run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+CFG = CNNConfig(name="plan", image_size=8, conv_layers=1, filters=4,
+                fc_layers=2, fc_neurons=32)
+
+
+class TestPlanForAxes:
+    def test_replicate_when_model_is_1(self):
+        plan = planner.plan_for_axes(CFG, nodes=4, model=1, batch_size=32)
+        assert plan.family == "replicate"
+        assert plan.batch_spec == P("nodes")
+        assert not plan.combine_grads
+        assert all(lp.parallel_dim == "replicate" for lp in plan.layers)
+
+    def test_layer_walk_covers_network(self):
+        plan = planner.plan_for_axes(CFG, nodes=4, model=2, batch_size=32)
+        names = [lp.name for lp in plan.layers]
+        assert names == ["conv0", "pool0", "fc0", "fc1"]
+        kinds = [lp.kind for lp in plan.layers]
+        assert kinds == ["conv", "pool", "fc", "fc"]
+
+    def test_batch_family_shards_batch(self):
+        plan = planner.plan_for_axes(CFG, nodes=4, model=2, batch_size=32,
+                                     family="batch")
+        assert plan.family == "batch"
+        assert plan.combine_grads
+        assert plan.batch_spec == P("nodes", None, "model")
+        assert all(lp.parallel_dim == "batch" for lp in plan.layers)
+        assert all(lp.spec == P("model") for lp in plan.layers)
+
+    def test_batch_tiles_use_local_shapes(self):
+        """The executed conv/fc tiles are the Alg. 4.2 choices on the
+        POST-sharDING local shapes (B/K rows), not the global ones."""
+        plan = planner.plan_for_axes(CFG, nodes=4, model=2, batch_size=32,
+                                     family="batch")
+        by_name = {lp.name: lp for lp in plan.layers}
+        assert by_name["conv0"].tile == choose_oc_tile(16, CFG.filters)
+        assert by_name["fc0"].tile == choose_fc_block(CFG.fc_neurons)
+        assert by_name["pool0"].tile == 0
+
+    def test_channel_family_tiles_use_local_width(self):
+        plan = planner.plan_for_axes(CFG, nodes=2, model=2, batch_size=32,
+                                     family="channel")
+        assert plan.family == "channel"
+        assert not plan.combine_grads
+        assert plan.batch_spec == P("nodes")    # batch stays replicated
+        by_name = {lp.name: lp for lp in plan.layers}
+        # forced channel goes column-parallel wherever the width divides
+        assert by_name["fc0"].parallel_dim == "channel"
+        assert by_name["fc0"].tile == choose_fc_block(CFG.fc_neurons // 2)
+        assert by_name["fc0"].spec == P(None, "model")
+        # convs never offer channel (planned-but-not-executed dimension)
+        assert by_name["conv0"].parallel_dim == "replicate"
+
+    def test_indivisible_batch_forces_channel_or_raises(self):
+        # B=30, K=4: batch family infeasible
+        plan = planner.plan_for_axes(CFG, nodes=2, model=4, batch_size=30)
+        assert plan.family == "channel"
+        with pytest.raises(ValueError, match="infeasible"):
+            planner.plan_for_axes(CFG, nodes=2, model=4, batch_size=30,
+                                  family="batch")
+
+    def test_generic_plan_without_cfg(self):
+        plan = planner.plan_for_axes(None, nodes=4, model=2, batch_size=32)
+        assert plan.family == "batch" and plan.layers == ()
+        assert plan.combine_grads
+        with pytest.raises(ValueError, match="divisible"):
+            planner.plan_for_axes(None, nodes=4, model=4, batch_size=30)
+        with pytest.raises(ValueError, match="CNNConfig"):
+            planner.plan_for_axes(None, nodes=4, model=2, batch_size=32,
+                                  family="channel")
+
+    def test_plan_is_hashable(self):
+        a = planner.plan_for_axes(CFG, nodes=4, model=2, batch_size=32)
+        b = planner.plan_for_axes(CFG, nodes=4, model=2, batch_size=32)
+        assert hash(a) == hash(b) and a == b
+        assert len({a, b}) == 1
+
+    def test_costs_populate(self):
+        plan = planner.plan_for_axes(CFG, nodes=4, model=2, batch_size=32)
+        assert plan.total_cost_s > 0
+        assert plan.total_cost_s == pytest.approx(
+            sum(lp.cost_s for lp in plan.layers))
+        for lp in plan.layers:
+            assert lp.flops > 0 or lp.kind == "pool"
+
+
+class TestPlanNetworkOnMesh:
+    @need_devices(4)
+    def test_mesh_axes_extracted(self):
+        mesh = make_hybrid_mesh(2, 2)
+        plan = planner.plan_network(CFG, mesh, batch_size=32)
+        assert (plan.nodes, plan.model) == (2, 2)
+
+    @need_devices(2)
+    def test_1d_mesh_degrades_to_replicate(self):
+        plan = planner.plan_network(CFG, make_nodes_mesh(2), batch_size=32)
+        assert plan.model == 1 and plan.family == "replicate"
+
+
+class TestPlanScope:
+    def test_take_walks_layers_in_kind_order(self):
+        plan = planner.plan_for_axes(CFG, nodes=2, model=2, batch_size=32,
+                                     family="batch")
+        with planner.plan_scope(plan) as sc:
+            assert planner.take("conv").name == "conv0"
+            assert planner.take("fc").name == "fc0"
+            assert planner.take("fc").name == "fc1"
+            # cursor wraps per kind: a second traversal realigns
+            assert planner.take("fc").name == "fc0"
+            assert planner.take("missing") is None
+        assert [lp.name for lp in sc.executed] == \
+            ["conv0", "fc0", "fc1", "fc0"]
+
+    def test_no_scope_is_inert(self):
+        assert planner.take("conv") is None
+        assert planner.current_plan() is None
+
+
+def _run_sgwu(m, *, device, mesh_name="", family="", uneven=False,
+              rounds=3, model_cfg=True):
+    cfg = CNNConfig(name="equiv", image_size=8, conv_layers=1, filters=4,
+                    fc_layers=1, fc_neurons=32)
+    xs, ys = image_dataset(64 * m * 2, size=8, seed=0)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    freqs = np.linspace(1.0, 2.0, m) if uneven else None
+    ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=m, batches=1,
+                     frequencies=freqs)
+    tc = TrainConfig(outer_strategy="sgwu", outer_nodes=m,
+                     optimizer="adamw", learning_rate=2e-3,
+                     total_steps=100, warmup_steps=5, local_steps=2,
+                     seed=0, device_outer=device, uneven_batches=uneven,
+                     mesh_name=mesh_name)
+    tr = BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds, tc,
+                    batch_size=32, model_cfg=cfg if model_cfg else None,
+                    plan_family=family)
+    return tr.train(rounds=rounds), tr
+
+
+class TestScheduledEqualsExecuted:
+    """The acceptance assertion: the NetworkPlan the planner emits is
+    exactly what the 2-D round executes — the kernels consumed the SAME
+    LayerPlan objects (tiles included), and the on-device batch sharding
+    is the plan's batch_spec."""
+
+    @need_devices(4)
+    @pytest.mark.parametrize("family", ["", "channel"])
+    def test_engine_executes_the_plan(self, family):
+        _, tr = _run_sgwu(2, device=True, mesh_name="nodes2xmodel2",
+                          family=family, rounds=2)
+        eng = tr.last_engine
+        assert eng.netplan is not None
+        want = planner.plan_for_axes(
+            CNNConfig(name="equiv", image_size=8, conv_layers=1, filters=4,
+                      fc_layers=1, fc_neurons=32),
+            nodes=2, model=2, batch_size=32, family=family)
+        assert eng.netplan == want                  # scheduled
+        # executed: the round's kernel dispatches consumed exactly the
+        # plan's conv/fc layers, in forward order (pools take no plan)
+        planned = [lp for lp in eng.netplan.layers if lp.kind != "pool"]
+        assert eng.executed[:len(planned)] == planned
+        for got in eng.executed:                    # tiles included
+            assert got in planned
+
+    @need_devices(4)
+    def test_batch_sharding_is_the_plan_spec(self):
+        _, tr = _run_sgwu(2, device=True, mesh_name="nodes2xmodel2",
+                          rounds=1)
+        eng = tr.last_engine
+        assert eng.netplan.family == "batch"
+        # the engine's batch placement object carries the plan's spec
+        state = eng.setup(1)
+        assert state.batch_sharding.spec == eng.netplan.batch_spec
+
+    @need_devices(4)
+    def test_generic_plan_without_model_cfg(self):
+        rep, tr = _run_sgwu(2, device=True, mesh_name="nodes2xmodel2",
+                            rounds=2, model_cfg=False)
+        assert tr.last_engine.netplan.family == "batch"
+        assert tr.last_engine.netplan.layers == ()
+        assert np.isfinite(rep.losses).all()
+
+
+class TestGradCombine:
+    """The batch-family recombiner is EXACT for per-example-mean losses,
+    masked or not — checked against the unsharded gradient under a real
+    shard_map over a `model` axis."""
+
+    @need_devices(2)
+    @pytest.mark.parametrize("masked", [False, True])
+    def test_exact_recombination(self, masked):
+        from jax.experimental.shard_map import shard_map
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:2]), ("model",))
+        plan = planner.plan_for_axes(None, nodes=1, model=2, batch_size=8)
+        combine = planner.grad_combine(plan)
+        w = jnp.linspace(0.1, 0.5, 5)
+        x = jnp.arange(8.0).reshape(8, 1) * jnp.ones((8, 5))
+        if masked:
+            mask = jnp.array([1, 1, 1, 0, 1, 1, 0, 0], jnp.float32)
+        else:
+            mask = jnp.ones((8,), jnp.float32)
+
+        def loss_fn(w, batch):
+            per = jnp.sum(batch["x"] * w, axis=-1) ** 2
+            m = batch["mask"]
+            return jnp.sum(per * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+        want_loss, want_grad = jax.value_and_grad(loss_fn)(
+            w, {"x": x, "mask": mask})
+
+        def body(w, x, mask):
+            batch = {"x": x, "mask": mask}
+            loss, grad = jax.value_and_grad(loss_fn)(w, batch)
+            loss, grad = combine(loss, (grad,), batch)
+            return loss, grad[0]
+
+        got_loss, got_grad = shard_map(
+            body, mesh=mesh, in_specs=(P(), P("model"), P("model")),
+            out_specs=(P(), P()))(w, x, mask)
+        np.testing.assert_allclose(np.asarray(got_loss), want_loss,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_grad), want_grad,
+                                   rtol=1e-6)
+
+
+class TestChannelCollectives:
+    """rep_in/shard_dim/gather_cols make the column-parallel fc gradient
+    bit-exact against the unsharded layer (the K x trap regression)."""
+
+    @need_devices(2)
+    def test_column_parallel_fc_grads_exact(self):
+        from jax.experimental.shard_map import shard_map
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:2]), ("model",))
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (4, 6))
+        w = jax.random.normal(jax.random.fold_in(k, 1), (6, 8))
+        b = jax.random.normal(jax.random.fold_in(k, 2), (8,))
+
+        def ref_loss(w, b):
+            return jnp.sum((x @ w + b) ** 2)
+
+        want = jax.value_and_grad(ref_loss, argnums=(0, 1))(w, b)
+
+        def sharded_loss(x, w, b):
+            xr = planner.rep_in(x, "model")
+            ws = planner.shard_dim(w, 2, 8, "model")
+            bs = planner.shard_dim(b, 2, 8, "model")
+            y = planner.gather_cols(xr @ ws + bs, 2, "model")
+            return jnp.sum(y ** 2)
+
+        got = shard_map(
+            jax.value_and_grad(sharded_loss, argnums=(1, 2)),
+            mesh=mesh, in_specs=(P(), P(), P()),
+            out_specs=(P(), (P(), P())), check_rep=False)(x, w, b)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   rtol=1e-6)
+        for g, wg in zip(got[1], want[1]):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(wg),
+                                       rtol=1e-6, atol=1e-7)
