@@ -1,22 +1,46 @@
-"""Pytree checkpointing to .npz (flat-key encoding), multi-host-aware.
+"""Crash-safe pytree checkpointing to .npz (flat-key encoding).
 
 Simple and dependency-free: flattens the pytree with '/'-joined key paths,
 saves host-local numpy arrays.  ``save``/``restore`` round-trip params,
 optimizer state and the parameter-server version log.
+
+Crash-safety contract:
+
+* **Atomic writes** — payload and manifest are written to temp names and
+  published with ``os.replace``, manifest first, so a reader never sees a
+  truncated ``.npz`` and a visible payload always has its manifest.  A
+  process killed mid-save leaves only ``*.tmp`` strays, which
+  ``latest_step`` ignores.
+* **Validated restores** — the manifest records every key's dtype and
+  shape; ``restore`` raises ``CheckpointError`` (not a numpy traceback)
+  on a corrupt/partial file, a shape mismatch, or manifest/payload drift.
+* **Two checkpoint kinds** — ``kind="ckpt"`` is the plain weight
+  checkpoint; ``kind="state"`` is the full resumable training state
+  (engine snapshot arrays + JSON scalars: parameter-server version log,
+  IDPA allocation state, RNG state, heap clock) that
+  ``BPTTrainer.run(hooks=TrainHooks(resume=True))`` restores losslessly.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "load_manifest",
+           "save_state", "restore_state", "CheckpointError"]
 
 _SEP = "/"
+_KINDS = ("ckpt", "state")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is corrupt, partial, or inconsistent with the
+    structure the caller asked to restore into."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -37,33 +61,120 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save(path: str, tree, step: int = 0, metadata: dict | None = None):
+def _check_kind(kind: str) -> str:
+    if kind not in _KINDS:
+        raise ValueError(f"checkpoint kind={kind!r}: choose one of {_KINDS}")
+    return kind
+
+
+def _payload_name(kind: str, step: int) -> str:
+    return f"{kind}_{step:08d}.npz"
+
+
+def _manifest_path(path: str, kind: str, step: int) -> str:
+    return os.path.join(path, f"{kind}_{step:08d}.json")
+
+
+def _atomic_write_bytes(final: str, write_fn) -> None:
+    """Write via a sibling ``.tmp`` + ``os.replace`` so a kill mid-write
+    never leaves a truncated file under the published name."""
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+
+
+def save(path: str, tree, step: int = 0, metadata: dict | None = None,
+         *, kind: str = "ckpt") -> str:
+    """Atomically save ``tree`` as ``<kind>_<step>.npz`` plus a manifest.
+
+    The manifest (``<kind>_<step>.json``) records per-key dtype/shape for
+    restore-time validation and carries ``metadata`` verbatim.  It is
+    published BEFORE the payload, so a visible ``.npz`` always has its
+    manifest; a kill between the two leaves a harmless stray manifest that
+    the next save at the same step overwrites.
+    """
+    _check_kind(kind)
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
-    np.savez(os.path.join(path, f"ckpt_{step:08d}.npz"), **flat)
-    meta = {"step": step, **(metadata or {})}
-    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(meta, f)
-    return os.path.join(path, f"ckpt_{step:08d}.npz")
+    manifest = {
+        "step": step,
+        "format": 1,
+        "keys": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                 for k, v in flat.items()},
+        "metadata": metadata or {},
+    }
+    payload = json.dumps(manifest).encode()
+    _atomic_write_bytes(_manifest_path(path, kind, step),
+                        lambda f: f.write(payload))
+    final = os.path.join(path, _payload_name(kind, step))
+    _atomic_write_bytes(final, lambda f: np.savez(f, **flat))
+    return final
 
 
-def latest_step(path: str) -> int | None:
+def latest_step(path: str, *, kind: str = "ckpt") -> int | None:
+    """Largest published step, ignoring strays (``*.tmp``, manifests,
+    other kinds, unrelated files)."""
+    _check_kind(kind)
     if not os.path.isdir(path):
         return None
+    pat = re.compile(rf"{kind}_(\d+)\.npz$")
     steps = [int(m.group(1)) for f in os.listdir(path)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+             if (m := pat.fullmatch(f))]
     return max(steps) if steps else None
 
 
-def restore(path: str, like, step: int | None = None):
-    """Restore into the structure of ``like`` (a template pytree)."""
+def load_manifest(path: str, step: int, *, kind: str = "ckpt") -> dict | None:
+    """The manifest for ``step``, or None for pre-manifest checkpoints."""
+    _check_kind(kind)
+    mpath = _manifest_path(path, kind, step)
+    if not os.path.exists(mpath):
+        return None
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(
+            f"checkpoint manifest {mpath} is corrupt: {e}") from e
+    # legacy flat format ({"step": ..., **metadata}) has no "keys" entry
+    if "keys" not in manifest:
+        return {"step": manifest.get("step", step), "format": 0,
+                "keys": None, "metadata": manifest}
+    return manifest
+
+
+def restore(path: str, like, step: int | None = None, *,
+            kind: str = "ckpt"):
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Raises ``FileNotFoundError`` when no checkpoint exists, ``KeyError``
+    when the payload lacks keys the template needs, and
+    ``CheckpointError`` — with the offending file named — on a corrupt or
+    truncated payload, a shape mismatch against the template, or a
+    payload whose arrays drifted from the manifest's recorded dtypes.
+    Leaves are cast to the template leaf's dtype (so a template built
+    from ``jnp.zeros_like`` state restores exactly).
+    """
+    _check_kind(kind)
     if step is None:
-        step = latest_step(path)
+        step = latest_step(path, kind=kind)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {path}")
-    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    fpath = os.path.join(path, _payload_name(kind, step))
+    try:
+        data = np.load(fpath)
+        files = set(data.files)
+    except FileNotFoundError:
+        raise
+    except (OSError, ValueError, zipfile.BadZipFile, EOFError) as e:
+        raise CheckpointError(
+            f"checkpoint {fpath} is corrupt or was truncated mid-write "
+            f"({e}); delete it and restore an earlier step") from e
+    manifest = load_manifest(path, step, kind=kind)
     flat_like = _flatten(like)
-    missing = set(flat_like) - set(data.files)
+    missing = set(flat_like) - files
     if missing:
         raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
     leaves, treedef = jax.tree_util.tree_flatten(like)
@@ -71,8 +182,68 @@ def restore(path: str, like, step: int | None = None):
         _SEP.join(_path_str(p) for p in path)
         for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
     ]
-    new_leaves = [
-        jax.numpy.asarray(data[key]).astype(leaf.dtype)
-        for key, leaf in zip(paths, leaves)
-    ]
+    new_leaves = []
+    for key, leaf in zip(paths, leaves):
+        try:
+            arr = data[key]
+        except (OSError, ValueError, zipfile.BadZipFile, EOFError,
+                KeyError) as e:
+            raise CheckpointError(
+                f"checkpoint {fpath} key {key!r} is unreadable "
+                f"(truncated or corrupt archive member): {e}") from e
+        if arr.dtype.kind == "V":
+            # ml_dtypes extension dtypes (bfloat16 & friends) come back
+            # from .npz as raw void bytes; reinterpret via the manifest's
+            # recorded dtype (or the template's, for pre-manifest files)
+            rec = manifest["keys"].get(key) if (
+                manifest is not None and manifest["keys"] is not None
+            ) else None
+            try:
+                target = np.dtype(rec["dtype"]) if rec \
+                    else np.asarray(leaf).dtype
+            except TypeError:
+                target = arr.dtype      # unknown name: drift check reports
+            if arr.dtype.itemsize == target.itemsize:
+                arr = arr.view(target)
+        if manifest is not None and manifest["keys"] is not None:
+            rec = manifest["keys"].get(key)
+            if rec is None:
+                raise CheckpointError(
+                    f"checkpoint {fpath} key {key!r} is absent from its "
+                    "manifest — payload and manifest are out of sync")
+            if str(arr.dtype) != rec["dtype"] or \
+                    list(arr.shape) != rec["shape"]:
+                raise CheckpointError(
+                    f"checkpoint {fpath} key {key!r} drifted from its "
+                    f"manifest: saved {arr.dtype}{list(arr.shape)}, "
+                    f"manifest says {rec['dtype']}{rec['shape']}")
+        want_shape = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want_shape:
+            raise CheckpointError(
+                f"checkpoint {fpath} key {key!r} has shape "
+                f"{tuple(arr.shape)}, template expects {want_shape}")
+        new_leaves.append(jax.numpy.asarray(arr).astype(
+            np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+# ----------------------------------------------------------------------
+# train-state checkpoints: engine snapshot arrays + JSON scalar state
+# ----------------------------------------------------------------------
+def save_state(path: str, arrays, step: int, scalars: dict) -> str:
+    """Save one resumable train-state checkpoint (``kind="state"``).
+
+    ``arrays`` is the engine's snapshot pytree (weights, optimizer state,
+    per-node locals); ``scalars`` is the JSON-able rest (parameter-server
+    version log, IDPA allocation state, RNG state, clocks, heap entries).
+    """
+    return save(path, arrays, step=step, metadata=scalars, kind="state")
+
+
+def restore_state(path: str, like, step: int | None = None
+                  ) -> tuple[Any, dict, int]:
+    """Restore a train-state checkpoint: ``(arrays, scalars, step)``."""
+    arrays, step = restore(path, like, step=step, kind="state")
+    manifest = load_manifest(path, step, kind="state")
+    scalars = manifest["metadata"] if manifest else {}
+    return arrays, scalars, step

@@ -72,6 +72,10 @@ class TrainReport:
     # non-empty when the executed backend differs from the requested one
     # (the EnginePlan's recorded device-count fallback reason)
     fallback: str = ""
+    # global index just past the last event (= its round + 1); differs
+    # from ``steps`` when the run resumed from a state checkpoint, where
+    # ``steps`` counts only the events this process produced
+    last_event: int = 0
 
     def summary(self) -> dict:
         out = {
@@ -101,7 +105,8 @@ class BPTTrainer:
                  speed_factors: Optional[Sequence[float]] = None,
                  accuracy_weighting: str = "normalized",
                  model_cfg=None,
-                 plan_family: str = ""):
+                 plan_family: str = "",
+                 fault_schedule=None):
         # accuracy_weighting:
         #   "paper"      — Eq. (10) verbatim: scale = gamma * Q.  With small
         #     absolute accuracies early in training this under-applies local
@@ -122,6 +127,11 @@ class BPTTrainer:
         self.model_cfg = model_cfg
         self.plan_family = plan_family
         self.m = train_cfg.outer_nodes
+        # optional FaultSchedule (core.faults): node churn the engines
+        # replay — fail/rejoin/slow transitions keyed on event indices
+        self.faults = fault_schedule
+        if fault_schedule is not None and not fault_schedule.empty:
+            fault_schedule.validate_nodes(self.m)
         self.speed = np.asarray(speed_factors if speed_factors is not None
                                 else np.ones(self.m), np.float64)
         self.opt = make_optimizer(train_cfg.optimizer)
@@ -305,8 +315,14 @@ class BPTTrainer:
         ``hooks`` layers cadences on the stream: accuracy evals every
         ``eval_every`` events (0 keeps the engine's historical default),
         ``checkpoint_every`` saves ``event.params`` into
-        ``checkpoint_dir`` via ``repro.checkpointing``, and ``on_round``
-        observes every event before it is yielded.
+        ``checkpoint_dir`` via ``repro.checkpointing`` — plus, for
+        resumable engines, a ``kind="state"`` checkpoint carrying the
+        engine snapshot, parameter-server log, IDPA allocation state and
+        host RNG state — and ``on_round`` observes every event before it
+        is yielded.  ``hooks.resume=True`` restores the latest state
+        checkpoint before the first event, so a killed run relaunched
+        with the same config continues losslessly (and a first launch
+        with ``resume=True`` simply starts from scratch).
 
         A generator: config errors raise at the first ``next()``.
         """
@@ -316,16 +332,56 @@ class BPTTrainer:
         engine = plan.engine_cls(self, plan)
         self.last_engine = engine
         eval_every = hooks.eval_every or engine.default_eval_every
-        for ev in engine.events(rounds):
+        state = engine.setup(rounds)
+        start = 0
+        if hooks.resume and hooks.checkpoint_dir:
+            start = self._restore_run(engine, state, hooks.checkpoint_dir)
+        for ev in engine.events(rounds, start=start, state=state):
             n = ev.round + 1
             if self.eval_fn and n % eval_every == 0:
                 ev.accuracy = self._eval(ev.params)
             if hooks.checkpoint_every and hooks.checkpoint_dir \
                     and n % hooks.checkpoint_every == 0:
                 checkpoint.save(hooks.checkpoint_dir, ev.params, step=n)
+                self._save_run_state(engine, state, hooks.checkpoint_dir, n)
             if hooks.on_round:
                 hooks.on_round(ev)
             yield ev
+
+    def _save_run_state(self, engine, state, ckpt_dir: str, n: int) -> None:
+        """Write the resumable train state (``kind="state"``) at event n."""
+        snap = engine.snapshot(state)
+        if snap is None:
+            return                       # engine is not resumable
+        arrays, scalars = snap
+        scalars["trainer"] = {
+            "next_event": n,
+            "rng": self.rng.bit_generator.state,
+            "dataset": self.dataset.state_dict(),
+            "q_ema": self._q_ema,
+        }
+        checkpoint.save_state(ckpt_dir, arrays, n, scalars)
+
+    def _restore_run(self, engine, state, ckpt_dir: str) -> int:
+        """Restore the latest state checkpoint into ``state``; returns the
+        event index to resume from (0 when no state checkpoint exists)."""
+        step = checkpoint.latest_step(ckpt_dir, kind="state")
+        if step is None:
+            return 0
+        snap = engine.snapshot(state)
+        if snap is None:
+            raise ValueError(
+                f"{type(engine).__name__} does not support resumption but "
+                f"{ckpt_dir} holds a state checkpoint")
+        arrays_like, _ = snap
+        arrays, scalars, _ = checkpoint.restore_state(
+            ckpt_dir, arrays_like, step)
+        engine.restore_snapshot(state, arrays, scalars)
+        tr = scalars["trainer"]
+        self.rng.bit_generator.state = tr["rng"]
+        self.dataset.load_state_dict(tr["dataset"])
+        self._q_ema = tr["q_ema"]
+        return int(tr["next_event"])
 
     def train(self, rounds: int,
               hooks: Optional[TrainHooks] = None) -> TrainReport:
@@ -345,4 +401,5 @@ class BPTTrainer:
             last.comm_bytes if last else 0,
             self.dataset.totals,
             last.params if last is not None else self.params0,
-            backend=plan.backend, fallback=plan.fallback)
+            backend=plan.backend, fallback=plan.fallback,
+            last_event=last.round + 1 if last is not None else 0)

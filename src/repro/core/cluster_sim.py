@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -75,6 +76,13 @@ class ClusterSim:
         (heterogeneity profile; the paper's 1/mu_j up to measurement noise).
     strategy : 'sgwu' | 'agwu'
     partitioning : 'idpa' | 'udpa'
+    duration_source : 'model' rolls virtual durations from the per-sample
+        heterogeneity profile (+ optional noise) — the explicit simulation
+        mode; 'measured' feeds IDPA the *measured* wall time of each
+        ``worker_train`` call (requires one), the production feedback path.
+    fault_schedule : optional ``core.faults.FaultSchedule`` — node churn.
+        SGWU applies transitions at the start of the named iteration; AGWU
+        before processing the named push (see the faults module docstring).
     """
 
     def __init__(self,
@@ -86,7 +94,9 @@ class ClusterSim:
                  partitioning: str = "idpa",
                  noise: float = 0.0,
                  seed: int = 0,
-                 idpa_mode: str = "paper"):
+                 idpa_mode: str = "paper",
+                 duration_source: str = "model",
+                 fault_schedule=None):
         self.N = int(num_samples)
         self.t = np.asarray(per_sample_time, dtype=np.float64)
         self.m = len(self.t)
@@ -96,10 +106,18 @@ class ClusterSim:
             raise ValueError(strategy)
         if partitioning not in ("idpa", "udpa"):
             raise ValueError(partitioning)
+        if duration_source not in ("model", "measured"):
+            raise ValueError(
+                f"duration_source={duration_source!r}: 'model' or 'measured'")
         self.strategy = strategy
         self.partitioning = partitioning
+        self.duration_source = duration_source
         self.noise = noise
         self.rng = np.random.default_rng(seed)
+        self.faults = fault_schedule if fault_schedule is not None \
+            and not fault_schedule.empty else None
+        if self.faults is not None:
+            self.faults.validate_nodes(self.m)
 
         if partitioning == "idpa":
             # nominal frequency = inverse per-sample time (the paper's mu_j)
@@ -116,15 +134,16 @@ class ClusterSim:
             base *= 1.0 + self.noise * (self.rng.random() - 0.5)
         return max(base, 1e-9)
 
-    def _allocate(self, durations: Optional[np.ndarray]) -> np.ndarray:
+    def _allocate(self, durations: Optional[np.ndarray],
+                  active: Optional[np.ndarray] = None) -> np.ndarray:
         """Advance the partitioner one batch; returns cumulative totals."""
         if self.part.current_batch == 0:
-            self.part.first_batch()
+            self.part.first_batch(active=active)
         elif not self.part.done:
             if isinstance(self.part, IDPAPartitioner):
-                self.part.next_batch(durations)
+                self.part.next_batch(durations, active=active)
             else:
-                self.part.next_batch(None)
+                self.part.next_batch(None, active=active)
         return self.part.totals.copy()
 
     # ------------------------------------------------------------------
@@ -132,6 +151,10 @@ class ClusterSim:
             init_weights=None,
             worker_train: Optional[WorkerTrainFn] = None,
             eval_fn: Optional[Callable] = None) -> SimResult:
+        if self.duration_source == "measured" and worker_train is None:
+            raise ValueError(
+                "duration_source='measured' needs a worker_train callback "
+                "to measure — use 'model' for callback-free simulation")
         if self.strategy == "sgwu":
             return self._run_sgwu(init_weights, worker_train, eval_fn)
         return self._run_agwu(init_weights, worker_train, eval_fn)
@@ -148,24 +171,51 @@ class ClusterSim:
         acc_trace = []
 
         for it in range(self.K):
-            totals = self._allocate(durations) if not self.part.done or \
-                totals is None else totals
-            durations = np.array(
-                [self._duration(j, int(totals[j])) for j in range(self.m)])
-            busy += durations
-            t_max = float(durations.max())
-            sync_wait += float((t_max - durations).sum())   # Eq. (8) term
-            clock += t_max
+            status = self.faults.status_at(it, self.m) if self.faults \
+                else None
+            alive = status > 0.0 if status is not None \
+                else np.ones(self.m, dtype=bool)
+            if not alive.any():
+                raise RuntimeError(
+                    f"fault schedule leaves no node alive at iteration {it}")
+            if not self.part.done or totals is None:
+                # a just-rejoined node has no measurement from the previous
+                # iteration (its duration slot is 0) — it sits this batch
+                # out and earns work once it reports a real duration
+                active = None
+                if self.faults:
+                    active = alive.copy()
+                    if durations is not None:
+                        active &= durations > 0.0
+                totals = self._allocate(durations, active=active)
 
+            durations = np.zeros(self.m)
             subs = []
             for j in range(self.m):
+                if not alive[j]:
+                    # dead: no pull, no compute, missed the barrier —
+                    # Eq. 7 excludes it (weight 0, no transfer charged)
+                    subs.append((j, None, 0.0))
+                    continue
+                d = self._duration(j, int(totals[j])) \
+                    if self.duration_source == "model" else 0.0
                 w, _ = server.pull(j)
                 if worker_train is not None:
                     idx = self._indices(j, totals)
+                    t0 = time.perf_counter()
                     new_w, q = worker_train(j, w, idx, it)
+                    if self.duration_source == "measured":
+                        d = max(time.perf_counter() - t0, 1e-9)
                 else:
                     new_w, q = w, 1.0
+                if status is not None:
+                    d *= status[j]          # slow-node factor
+                durations[j] = d
                 subs.append((j, new_w, q))
+            busy += durations
+            t_max = float(durations[alive].max())
+            sync_wait += float((t_max - durations[alive]).sum())  # Eq. (8)
+            clock += t_max
             server.push_sgwu(subs, virtual_time=clock)
             if eval_fn is not None:
                 acc_trace.append((clock, eval_fn(server.global_weights)))
@@ -179,30 +229,78 @@ class ClusterSim:
         busy = np.zeros(self.m)
         iters_done = np.zeros(self.m, dtype=np.int64)
         acc_trace = []
+        measured = self.duration_source == "measured"
+
+        # churn bookkeeping: a fail bumps the node's epoch, staling its
+        # in-flight heap entry (the push is dropped at pop time — lost)
+        down: set[int] = set()
+        slow = np.ones(self.m)
+        epoch = np.zeros(self.m, dtype=np.int64)
+        fault_events = self.faults.events if self.faults else ()
+        cursor = 0
 
         totals = self._allocate(None)
-        # priority queue of (completion_time, node)
-        heap: list[tuple[float, int]] = []
+        # priority queue of (completion_time, node, epoch-at-schedule)
+        heap: list[tuple[float, int, int]] = []
         clock = 0.0
         local_w = {}
+        # per-node pending (weights, accuracy): in measured mode the work
+        # RUNS at schedule time (its wall time IS the charged duration)
+        # and lands on the server when its completion event pops
+        pending: dict[int, tuple] = {}
         # the durations the simulation actually charged each node (most
         # recent work unit) — the IDPA feedback signal, Alg. 3.1's
         # measured t_j.  Re-rolling fresh noisy durations here would
         # consume extra RNG and decouple allocation from observed load.
         charged = np.zeros(self.m)
-        for j in range(self.m):
+
+        def schedule(j: int, at: float):
             w, _ = server.pull(j)
-            local_w[j] = w
-            d = self._duration(j, int(totals[j]))
+            it = int(iters_done[j])
+            if measured:
+                idx = self._indices(j, totals)
+                t0 = time.perf_counter()
+                pending[j] = worker_train(j, w, idx, it)
+                d = max(time.perf_counter() - t0, 1e-9)
+            else:
+                local_w[j] = w
+                d = self._duration(j, int(totals[j]))
+            d *= float(slow[j])
             charged[j] = d
             busy[j] += d
-            heapq.heappush(heap, (d, j))
+            heapq.heappush(heap, (at + d, j, int(epoch[j])))
 
+        for j in range(self.m):
+            schedule(j, 0.0)
+
+        i = 0                                    # successful-push index
         while heap:
-            t_done, j = heapq.heappop(heap)
+            # fault transitions keyed on the push index, applied before
+            # the pop — "fail at 5" drops everything in flight from the
+            # 5th merge event onward
+            while cursor < len(fault_events) and \
+                    fault_events[cursor].round <= i:
+                e = fault_events[cursor]
+                cursor += 1
+                if e.kind == "fail":
+                    down.add(e.node)
+                    epoch[e.node] += 1           # in-flight work is lost
+                elif e.kind == "rejoin":
+                    down.discard(e.node)
+                    if iters_done[e.node] < self.K:
+                        schedule(e.node, clock)
+                else:
+                    slow[e.node] = e.factor
+            if not heap:
+                break
+            t_done, j, ep = heapq.heappop(heap)
+            if j in down or ep != int(epoch[j]):
+                continue                         # lost push: died mid-round
             clock = t_done
             it = int(iters_done[j])
-            if worker_train is not None:
+            if measured:
+                new_w, q = pending.pop(j)
+            elif worker_train is not None:
                 idx = self._indices(j, totals)
                 new_w, q = worker_train(j, local_w[j], idx, it)
             else:
@@ -211,21 +309,20 @@ class ClusterSim:
             if eval_fn is not None:
                 acc_trace.append((clock, eval_fn(server.global_weights)))
             iters_done[j] += 1
+            i += 1
 
-            # incremental allocation: advance once every node finished
+            # incremental allocation: advance once every LIVE node finished
             # iteration `a` (the paper allocates per global batch round),
-            # feeding IDPA the durations the simulation charged
-            if not self.part.done and int(iters_done.min()) >= \
-                    self.part.current_batch:
-                totals = self._allocate(charged.copy())
+            # feeding IDPA the durations the simulation charged; dead nodes
+            # neither gate the batch nor receive any of it
+            alive = np.array([jj not in down for jj in range(self.m)])
+            if not self.part.done and alive.any() and \
+                    int(iters_done[alive].min()) >= self.part.current_batch:
+                totals = self._allocate(charged.copy(),
+                                        active=alive if down else None)
 
             if iters_done[j] < self.K:
-                w, _ = server.pull(j)
-                local_w[j] = w
-                d = self._duration(j, int(totals[j]))
-                charged[j] = d
-                busy[j] += d
-                heapq.heappush(heap, (t_done + d, j))
+                schedule(j, t_done)
 
         return self._result(server, clock, 0.0, busy, totals, acc_trace)
 

@@ -73,6 +73,12 @@ class RoundEvent:
     params: Any                # global weights after the merge
     node: int = -1             # AGWU: pushing node (-1 for barrier engines)
     accuracy: Optional[float] = None   # filled at the TrainHooks cadence
+    # measured per-node durations this event fed to IDPA (the Alg. 3.1
+    # feedback signal — hooks observe exactly what the partitioner sees)
+    durations: Optional[np.ndarray] = None
+    # per-node membership at this event: 0.0 = failed, else the node's
+    # current slowdown factor (1.0 = nominal) — FaultSchedule.status_at
+    node_status: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -82,12 +88,18 @@ class TrainHooks:
     ``eval_every=0`` keeps each engine's historical default: every round
     for SGWU, every 5 rounds for the sync baseline, every m pushes for
     AGWU.  ``checkpoint_every`` saves ``event.params`` through
-    ``repro.checkpointing.checkpoint.save`` into ``checkpoint_dir``.
+    ``repro.checkpointing.checkpoint.save`` into ``checkpoint_dir`` and,
+    for resumable engines, a ``kind="state"`` train-state checkpoint
+    (engine snapshot + parameter-server log + IDPA state + RNG state).
+    ``resume=True`` restores the latest train-state checkpoint from
+    ``checkpoint_dir`` before the first round — a killed run relaunched
+    with the same hooks continues losslessly.
     """
     on_round: Optional[Callable[[RoundEvent], None]] = None
     eval_every: int = 0            # events between accuracy evals (0=default)
     checkpoint_every: int = 0      # events between checkpoints (0=off)
     checkpoint_dir: str = ""
+    resume: bool = False           # restore latest state ckpt before round 1
 
 
 # ----------------------------------------------------------------------
@@ -206,6 +218,16 @@ class OuterEngine:
     two as a generator.  Engines never read TrainConfig substrate flags —
     ``resolve_engine`` already decided everything and recorded it in the
     ``EnginePlan`` they are constructed with.
+
+    Crash-safe resumption: ``snapshot(state) -> (arrays, scalars)``
+    captures everything ``setup`` + the rounds so far produced — a pytree
+    of weight/optimizer arrays plus a JSON-able scalar dict (server
+    version log, clocks, heap entries).  ``restore_snapshot(state,
+    arrays, scalars)`` rebuilds a fresh ``setup`` state in place, after
+    which ``events(rounds, start=n, state=state)`` continues from event
+    ``n`` exactly where the killed run stopped.  Engines that return
+    ``None`` from ``snapshot`` are not resumable (no state checkpoint is
+    written for them).
     """
     backend = ""
     strategy = ""
@@ -226,10 +248,27 @@ class OuterEngine:
     def run_round(self, state, r: int) -> RoundEvent:
         raise NotImplementedError
 
-    def events(self, rounds: int) -> Iterator[RoundEvent]:
-        state = self.setup(rounds)
-        for r in range(self.total_events(rounds)):
+    def events(self, rounds: int, start: int = 0,
+               state: Any = None) -> Iterator[RoundEvent]:
+        state = self.setup(rounds) if state is None else state
+        for r in range(start, self.total_events(rounds)):
             yield self.run_round(state, r)
+
+    def snapshot(self, state):
+        """``(arrays, scalars)`` capturing the resumable train state, or
+        ``None`` for engines that do not support resumption."""
+        return None
+
+    def restore_snapshot(self, state, arrays, scalars) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support resumption")
+
+    # -- fault-schedule access ------------------------------------------
+    @property
+    def faults(self):
+        """The trainer's FaultSchedule, or None when churn-free."""
+        f = self.t.faults
+        return None if (f is None or f.empty) else f
 
 
 # -------------------------- sync baseline ---------------------------
@@ -251,7 +290,20 @@ class ScanEngine(OuterEngine):
 
     def setup(self, rounds):
         t = self.t
+        if self.faults is not None:
+            raise ValueError(
+                "the sync baseline has no outer-layer membership to churn; "
+                "fault schedules need outer_strategy='sgwu' or 'agwu'")
         return _ScanState(t.params0, t.opt.init(t.params0))
+
+    def snapshot(self, st):
+        arrays = {"params": st.params, "opt": st.opt_state}
+        return arrays, {"clock": st.clock}
+
+    def restore_snapshot(self, st, arrays, scalars):
+        st.params = arrays["params"]
+        st.opt_state = arrays["opt"]
+        st.clock = float(scalars["clock"])
 
     def run_round(self, st, r):
         t = self.t
@@ -301,9 +353,37 @@ class _StackedSGWUEngine(OuterEngine):
     def setup(self, rounds):
         return _StackedState(*self._build())
 
+    def snapshot(self, st):
+        arrays = {"global": st.server.global_weights, "opt": st.stacked_opt}
+        scalars = {"clock": st.clock, "sync_wait": st.sync_wait,
+                   "server": st.server.state_dict()}
+        return arrays, scalars
+
+    def restore_snapshot(self, st, arrays, scalars):
+        g, opt = arrays["global"], arrays["opt"]
+        mesh = self.plan.mesh
+        if mesh is not None:       # re-establish the device-resident layout
+            P = jax.sharding.PartitionSpec
+            g = jax.device_put(g, jax.sharding.NamedSharding(mesh, P()))
+            opt = jax.device_put(
+                opt, jax.sharding.NamedSharding(mesh, P("nodes")))
+        st.server.global_weights = g
+        st.server.load_state_dict(scalars["server"])
+        st.stacked_opt = opt
+        st.clock = float(scalars["clock"])
+        st.sync_wait = float(scalars["sync_wait"])
+
     def run_round(self, st, r):
         t = self.t
-        stacked_w, _ = st.server.pull_all_stacked()
+        faults = self.faults
+        status = faults.status_at(r, t.m) if faults else None
+        alive = status > 0.0 if status is not None \
+            else np.ones(t.m, dtype=bool)
+        if not alive.any():
+            raise RuntimeError(
+                f"fault schedule leaves no node alive at round {r}")
+        stacked_w, _ = st.server.pull_all_stacked(
+            active=alive if faults else None)
         batches = t.dataset.stacked_round_batches(
             t.batch_size, t.tc.local_steps, t.rng,
             uneven=t.tc.uneven_batches)
@@ -317,20 +397,30 @@ class _StackedSGWUEngine(OuterEngine):
             stacked_w, st.stacked_opt, batches, jnp.asarray(r, jnp.int32))
         node_losses = np.asarray(jax.block_until_ready(node_losses))
         wall = time.perf_counter() - t0
+        # a dead node's lane still computes (the fused dispatch is
+        # all-or-nothing) but its result never reaches the barrier: its
+        # duration is 0 (no push to wait for), its merge weight is 0, and
+        # it re-enters automatically at the next round's rebroadcast pull
         durs = (wall / t.m) * t.speed
-        st.clock += durs.max()
-        st.sync_wait += float((durs.max() - durs).sum())      # Eq. (8)
+        if status is not None:
+            durs = durs * status             # slow factors; dead lanes -> 0
+        st.clock += float(durs[alive].max())
+        st.sync_wait += float((durs[alive].max() - durs[alive]).sum())
         if t.eval_fn:
-            qs = t._eval_nodes(stacked_w)
+            qs = np.asarray(t._eval_nodes(stacked_w), dtype=np.float64)
         else:
-            qs = [1.0] * t.m             # SGWU normalises in Eq. 7
-        st.server.push_sgwu_stacked(stacked_w, qs, virtual_time=st.clock)
-        t.dataset.report_durations(durs)
-        return RoundEvent(round=r, node_losses=node_losses,
-                          loss=float(node_losses.mean()),
+            qs = np.ones(t.m)                # SGWU normalises in Eq. 7
+        qs = np.where(alive, qs, 0.0)        # Eq. 7 excludes the dead
+        st.server.push_sgwu_stacked(stacked_w, qs, virtual_time=st.clock,
+                                    active=alive if faults else None)
+        t.dataset.report_durations(durs,
+                                   active=alive if faults else None)
+        loss = float(node_losses[alive].mean())
+        return RoundEvent(round=r, node_losses=node_losses, loss=loss,
                           virtual_clock=st.clock, sync_wait=st.sync_wait,
                           comm_bytes=st.server.comm_bytes,
-                          params=st.server.global_weights)
+                          params=st.server.global_weights,
+                          durations=durs.copy(), node_status=status)
 
 
 class VmapEngine(_StackedSGWUEngine):
@@ -431,27 +521,56 @@ class SequentialEngine(OuterEngine):
         return _SequentialState(ParameterServer(t.params0, t.m),
                                 [t.opt.init(t.params0) for _ in range(t.m)])
 
+    def snapshot(self, st):
+        arrays = {"global": st.server.global_weights,
+                  "opt": {str(j): s for j, s in enumerate(st.opt_states)}}
+        scalars = {"clock": st.clock, "sync_wait": st.sync_wait,
+                   "server": st.server.state_dict()}
+        return arrays, scalars
+
+    def restore_snapshot(self, st, arrays, scalars):
+        st.server.global_weights = arrays["global"]
+        st.server.load_state_dict(scalars["server"])
+        st.opt_states = [arrays["opt"][str(j)]
+                         for j in range(len(st.opt_states))]
+        st.clock = float(scalars["clock"])
+        st.sync_wait = float(scalars["sync_wait"])
+
     def run_round(self, st, r):
         t = self.t
+        faults = self.faults
+        status = faults.status_at(r, t.m) if faults else None
+        alive = status > 0.0 if status is not None \
+            else np.ones(t.m, dtype=bool)
+        if not alive.any():
+            raise RuntimeError(
+                f"fault schedule leaves no node alive at round {r}")
         subs, durs = [], np.zeros(t.m)
         node_losses = np.zeros(t.m)
         for j in range(t.m):
+            if not alive[j]:
+                # a failed node never pulls, computes, or pushes: it
+                # misses the barrier and Eq. 7 excludes it (weight 0)
+                subs.append((j, None, 0.0))
+                continue
             w, _ = st.server.pull(j)
             w2, st.opt_states[j], loss, dur = t._local_round(
                 w, st.opt_states[j], j, r)
             q = t._eval(w2) if t.eval_fn else 1.0
             subs.append((j, w2, max(q, 1e-3)))  # SGWU normalises in Eq. 7
-            durs[j] = dur
+            durs[j] = dur * (status[j] if status is not None else 1.0)
             node_losses[j] = loss
-        st.clock += durs.max()
-        st.sync_wait += float((durs.max() - durs).sum())      # Eq. (8)
+        st.clock += float(durs[alive].max())
+        st.sync_wait += float((durs[alive].max() - durs[alive]).sum())
         st.server.push_sgwu(subs, virtual_time=st.clock)
-        t.dataset.report_durations(durs)
+        t.dataset.report_durations(durs,
+                                   active=alive if faults else None)
         return RoundEvent(round=r, node_losses=node_losses,
-                          loss=float(node_losses.mean()),
+                          loss=float(node_losses[alive].mean()),
                           virtual_clock=st.clock, sync_wait=st.sync_wait,
                           comm_bytes=st.server.comm_bytes,
-                          params=st.server.global_weights)
+                          params=st.server.global_weights,
+                          durations=durs.copy(), node_status=status)
 
 
 # ----------------------------- AGWU ---------------------------------
@@ -459,13 +578,18 @@ class SequentialEngine(OuterEngine):
 class _HeapState:
     server: ParameterServer
     opt_states: list
-    heap: list                     # (virtual_time, node, round)
+    heap: list                     # (virtual_time, node, round, epoch)
     local: dict
     base_local: dict
     rounds_done: np.ndarray
     node_durs: np.ndarray
     rounds: int
     clock: float = 0.0
+    # --- node churn ---
+    down: set = dataclasses.field(default_factory=set)
+    slow: np.ndarray = None        # per-node duration multipliers
+    epoch: np.ndarray = None       # bumped on fail: stales in-flight work
+    fault_cursor: int = 0          # next unapplied FaultSchedule event
 
 
 class HeapEngine(OuterEngine):
@@ -474,6 +598,16 @@ class HeapEngine(OuterEngine):
     One ``RoundEvent`` per push: ``total_events`` is m x rounds.  The
     host-server variant ships full local weights through a pre-jitted,
     buffer-donating Eq. 10 push.
+
+    Node churn: fault-schedule transitions are keyed on the EVENT index
+    (the i-th successful push) and applied before each heap pop.  A
+    ``fail`` bumps the node's epoch — its in-flight heap entry becomes
+    stale and is dropped at pop time (the push never arrives at the
+    server, Eq. 10 never sees the lost work).  A ``rejoin`` re-pulls the
+    current global weights and re-enters the heap at the current virtual
+    clock with a FRESH base version, so its next gamma (Eq. 10) reflects
+    the staleness it actually has.  A ``slow`` multiplies the node's
+    measured durations, which flows straight into the IDPA feedback.
     """
     backend = "heap"
     strategy = "agwu"
@@ -500,20 +634,54 @@ class HeapEngine(OuterEngine):
             server.warmup_agwu()   # compile the donated Eq. 10 push up front
         st = _HeapState(server, [t.opt.init(t.params0) for _ in range(t.m)],
                         [], {}, {}, np.zeros(t.m, np.int64), np.ones(t.m),
-                        rounds)
+                        rounds, slow=np.ones(t.m),
+                        epoch=np.zeros(t.m, np.int64))
         for j in range(t.m):
             if self.device_nodes:
                 st.opt_states[j] = jax.device_put(st.opt_states[j],
                                                   self.plan.devices[j])
             st.local[j] = self._pull(st, j)
-            heapq.heappush(st.heap, (0.0, j, 0))
+            heapq.heappush(st.heap, (0.0, j, 0, 0))
         return st
 
-    def run_round(self, st, i):
+    # ---------------- churn transitions ------------------------------
+    def _apply_faults(self, st, i):
+        faults = self.faults
+        if faults is None:
+            return
+        evs = faults.events
+        while st.fault_cursor < len(evs) and evs[st.fault_cursor].round <= i:
+            e = evs[st.fault_cursor]
+            st.fault_cursor += 1
+            if e.kind == "fail":
+                st.down.add(e.node)
+                st.epoch[e.node] += 1       # in-flight work is lost
+            elif e.kind == "rejoin":
+                st.down.discard(e.node)
+                if st.rounds_done[e.node] < st.rounds:
+                    st.local[e.node] = self._pull(st, e.node)
+                    heapq.heappush(
+                        st.heap, (st.clock, e.node,
+                                  int(st.rounds_done[e.node]),
+                                  int(st.epoch[e.node])))
+            else:                           # "slow"
+                st.slow[e.node] = e.factor
+
+    def _status(self, st):
+        status = st.slow.copy()
+        for j in st.down:
+            status[j] = 0.0
+        return status
+
+    def _process(self, st, i) -> Optional[RoundEvent]:
+        """Pop one heap entry; None = the push was lost to a failure."""
         t = self.t
-        vt, j, r = heapq.heappop(st.heap)
+        vt, j, r, epoch = heapq.heappop(st.heap)
+        if j in st.down or epoch != int(st.epoch[j]):
+            return None                     # stale push: node died mid-round
         w2, st.opt_states[j], loss, dur = t._local_round(
             st.local[j], st.opt_states[j], j, r)
+        dur *= float(st.slow[j])
         st.node_durs[j] = dur
         st.clock = vt + dur
         q = t._eval(w2) if t.eval_fn else 1.0
@@ -526,17 +694,113 @@ class HeapEngine(OuterEngine):
                                 virtual_time=st.clock,
                                 donate=True)  # w2 is dead after the push
         st.rounds_done[j] += 1
-        if int(st.rounds_done.min()) >= t.dataset.part.current_batch:
-            t.dataset.report_durations(st.node_durs * t.dataset.totals
-                                       / max(t.batch_size, 1))
+        alive = np.array([jj not in st.down for jj in range(t.m)])
+        if alive.any() and \
+                int(st.rounds_done[alive].min()) >= \
+                t.dataset.part.current_batch:
+            t.dataset.report_durations(
+                st.node_durs * t.dataset.totals / max(t.batch_size, 1),
+                active=alive if st.down else None)
         if st.rounds_done[j] < st.rounds:
             st.local[j] = self._pull(st, j)
-            heapq.heappush(st.heap, (st.clock, j, int(st.rounds_done[j])))
+            heapq.heappush(st.heap, (st.clock, j, int(st.rounds_done[j]),
+                                     int(st.epoch[j])))
         return RoundEvent(round=i, node=j,
                           node_losses=np.asarray([loss]), loss=loss,
                           virtual_clock=st.clock, sync_wait=0.0,
                           comm_bytes=st.server.comm_bytes,
-                          params=st.server.global_weights)
+                          params=st.server.global_weights,
+                          durations=st.node_durs.copy(),
+                          node_status=self._status(st)
+                          if self.faults else None)
+
+    def run_round(self, st, i):
+        ev = None
+        while ev is None:
+            ev = self._process(st, i)
+        return ev
+
+    def events(self, rounds, start=0, state=None):
+        st = self.setup(rounds) if state is None else state
+        # a restored snapshot of a COMPLETED shorter run holds an empty
+        # heap (each node finished its configured rounds, so nothing was
+        # re-pulled); extending ``rounds`` on resume re-seeds those nodes
+        # at the current clock — the same transition as a rejoin.  Fresh
+        # and mid-run states already carry current-epoch entries, so
+        # this is a no-op for them.
+        live = {(j, e) for _, j, _, e in st.heap}
+        for j in range(self.t.m):
+            if j in st.down or st.rounds_done[j] >= st.rounds:
+                continue
+            if (j, int(st.epoch[j])) not in live:
+                st.local[j] = self._pull(st, j)
+                heapq.heappush(st.heap, (st.clock, j,
+                                         int(st.rounds_done[j]),
+                                         int(st.epoch[j])))
+        i = start
+        budget = self.total_events(rounds)
+        while i < budget:
+            self._apply_faults(st, i)
+            if not st.heap:
+                # permanent failures: the dead nodes' rounds never run;
+                # the surviving nodes have completed all of theirs
+                return
+            ev = self._process(st, i)
+            if ev is None:
+                continue                    # dropped (lost) push
+            yield ev
+            i += 1
+
+    # ---------------- crash-safe snapshot ----------------------------
+    def snapshot(self, st):
+        t = self.t
+        arrays = {
+            "global": st.server.global_weights,
+            "local": {str(j): st.local[j] for j in range(t.m)},
+            "opt": {str(j): s for j, s in enumerate(st.opt_states)},
+            "base": {str(j): (st.base_local[j] if self.device_nodes
+                              else st.server._base[j])
+                     for j in range(t.m)},
+        }
+        scalars = {
+            "clock": st.clock,
+            "heap": [[vt, j, r, e] for vt, j, r, e in st.heap],
+            "rounds_done": st.rounds_done.tolist(),
+            "node_durs": st.node_durs.tolist(),
+            "down": sorted(st.down),
+            "slow": st.slow.tolist(),
+            "epoch": st.epoch.tolist(),
+            "fault_cursor": st.fault_cursor,
+            "server": st.server.state_dict(),
+        }
+        return arrays, scalars
+
+    def restore_snapshot(self, st, arrays, scalars):
+        t = self.t
+        st.server.global_weights = arrays["global"]
+        st.server.load_state_dict(scalars["server"])
+        for j in range(t.m):
+            local, opt = arrays["local"][str(j)], arrays["opt"][str(j)]
+            base = arrays["base"][str(j)]
+            if self.device_nodes:
+                local = jax.device_put(local, self.plan.devices[j])
+                opt = jax.device_put(opt, self.plan.devices[j])
+                base = jax.device_put(base, self.plan.devices[j])
+                st.base_local[j] = base
+            else:
+                st.server._base[j] = base
+            st.local[j] = local
+            st.opt_states[j] = opt
+        st.heap = [(float(vt), int(j), int(r), int(e))
+                   for vt, j, r, e in scalars["heap"]]
+        heapq.heapify(st.heap)
+        st.rounds_done = np.asarray(scalars["rounds_done"], np.int64)
+        st.node_durs = np.asarray(scalars["node_durs"], np.float64)
+        st.down = set(scalars["down"])
+        st.slow = np.asarray(scalars["slow"], np.float64)
+        st.epoch = np.asarray(scalars["epoch"], np.int64)
+        st.fault_cursor = int(scalars["fault_cursor"])
+        st.clock = float(scalars["clock"])
 
 
 class HeapDeviceEngine(HeapEngine):

@@ -90,6 +90,44 @@ class _BaseAllocator:
         self._batch += 1
         return alloc
 
+    def _active_mask(self, active) -> np.ndarray:
+        """Validate/default the churn mask: allocation only targets nodes
+        the fault schedule reports alive.  Dead nodes keep what they were
+        already allocated (§3.3.1: no migration) but the current batch is
+        distributed entirely among the active nodes — the round is never
+        starved."""
+        if active is None:
+            return np.ones(self.num_nodes, dtype=bool)
+        mask = np.asarray(active, dtype=bool)
+        if mask.shape != (self.num_nodes,):
+            raise ValueError("need one active flag per node")
+        if not mask.any():
+            raise ValueError(
+                "cannot allocate a batch with every node inactive")
+        return mask
+
+    # ------------------------------------------------------------------
+    # crash-safe checkpointing: the partitioner is part of the resumable
+    # training state (a resumed run must continue the SAME incremental
+    # allocation, not restart it)
+    def state_dict(self) -> dict:
+        return {
+            "totals": self.totals.tolist(),
+            "history": [h.tolist() for h in self.history],
+            "batch": self._batch,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        totals = np.asarray(state["totals"], dtype=np.int64)
+        if totals.shape != (self.num_nodes,):
+            raise ValueError(
+                f"partitioner state has {totals.shape[0]} nodes, "
+                f"expected {self.num_nodes}")
+        self.totals = totals
+        self.history = [np.asarray(h, dtype=np.int64)
+                        for h in state["history"]]
+        self._batch = int(state["batch"])
+
 
 @dataclasses.dataclass
 class IDPAPartitioner(_BaseAllocator):
@@ -124,62 +162,92 @@ class IDPAPartitioner(_BaseAllocator):
         self.per_sample_time = np.zeros(self.num_nodes, dtype=np.float64)
 
     # ------------------------------------------------------------------
-    def first_batch(self) -> np.ndarray:
-        """Eq. (2): frequency-proportional split of the first batch."""
+    def first_batch(self, active=None) -> np.ndarray:
+        """Eq. (2): frequency-proportional split of the first batch.
+
+        ``active`` masks nodes out of the allocation (node churn): the
+        batch is split among the active nodes only.
+        """
         if self._batch != 0:
             raise RuntimeError("first_batch() already consumed")
+        mask = self._active_mask(active)
         b = self.batch_size
-        alloc = np.floor(b * self.freq / self.freq.sum()).astype(np.int64)
-        # node m takes the remainder (paper's j == m case)
-        alloc[-1] = b - int(alloc[:-1].sum())
+        freq = np.where(mask, self.freq, 0.0)
+        alloc = np.floor(b * freq / freq.sum()).astype(np.int64)
+        # the last active node takes the remainder (paper's j == m case)
+        last = int(np.flatnonzero(mask)[-1])
+        alloc[last] = b - int(alloc.sum() - alloc[last])
         return self._record(alloc)
 
-    def next_batch(self, durations: Sequence[float]) -> np.ndarray:
+    def next_batch(self, durations: Sequence[float],
+                   active=None) -> np.ndarray:
         """Eq. (3)-(5): allocation from measured durations of the previous
         iteration.
 
         durations[j] = T_j, wall time node j took to process its *current
-        total* sample count in the last iteration.
+        total* sample count in the last iteration.  Churn extensions:
+
+        * ``active`` masks failed nodes out of the batch entirely (their
+          duration entries are ignored — a dead node reports nothing);
+        * an active node may report ``inf`` (zero capacity): it receives
+          zero new samples, and the batch is still fully distributed among
+          the finite-capacity nodes — no starvation, no crash.
         """
         if self._batch == 0:
             raise RuntimeError("call first_batch() first")
         if self.done:
             raise RuntimeError("all batches already allocated")
+        mask = self._active_mask(active)
         T = np.asarray(durations, dtype=np.float64)
         if T.shape != (self.num_nodes,):
             raise ValueError("need one duration per node")
-        if np.any(T <= 0):
+        if np.any(T[mask] <= 0) or np.any(np.isnan(T[mask])):
             raise ValueError("durations must be positive")
 
         # t_bar_j = T_j / n_j  (paper normalises by the node's sample count)
         n_now = np.maximum(self.totals, 1)
-        t_bar = T / n_now
-        self.per_sample_time = t_bar
-        t_mean = t_bar.mean()                      # t_bar in Eq. (3)
+        t_bar = np.where(mask, T / n_now, np.inf)
+        # capacity carriers: active nodes with finite measured time.  An
+        # active node at zero capacity (inf duration) stays in the run but
+        # takes no new work this batch.
+        carrier = mask & np.isfinite(t_bar)
+        if not carrier.any():
+            raise ValueError(
+                "every active node reported infinite duration — no node "
+                "can carry this allocation batch")
+        self.per_sample_time = np.where(carrier, T / n_now,
+                                        self.per_sample_time)
+        t_mean = t_bar[carrier].mean()             # t_bar in Eq. (3)
 
         a = self._batch + 1                         # 1-indexed batch number
         b = self.batch_size
         if self.mode == "paper":
-            # Eq. (3): predicted mean duration of iteration a
-            T_a = (b * a * t_mean) / self.num_nodes
+            # Eq. (3): predicted mean duration of iteration a (the node
+            # count is the carriers' — the batch only lands on them)
+            T_a = (b * a * t_mean) / int(carrier.sum())
         else:
             # balanced: duration such that sum_j T_a/t_j == b*a exactly
-            T_a = (b * a) / float(np.sum(1.0 / t_bar))
+            T_a = (b * a) / float(np.sum(1.0 / t_bar[carrier]))
         # Eq. (4): target cumulative sample count so all nodes finish at T_a
-        n_target = T_a / t_bar
+        with np.errstate(invalid="ignore"):
+            n_target = np.where(carrier, T_a / t_bar, 0.0)
         # Eq. (5): the increment this batch, floored at zero (a node that is
         # already over-subscribed takes no new samples rather than "negative"
         # samples; the paper implicitly assumes non-negative increments).
         inc = np.floor(n_target - self.totals).astype(np.int64)
         inc = np.maximum(inc, 0)
-        # node m absorbs the remainder so the batch sums to floor(N/A)
-        head = int(inc[:-1].sum())
+        inc[~carrier] = 0
+        # the last capacity-carrying node absorbs the remainder so the
+        # batch sums to floor(N/A)
+        last = int(np.flatnonzero(carrier)[-1])
+        head = int(inc.sum() - inc[last])
         if head > b:
             # rescale head nodes to fit the batch, preserving proportions
-            scaled = np.floor(inc[:-1] * (b / head)).astype(np.int64)
-            inc[:-1] = scaled
-            head = int(scaled.sum())
-        inc[-1] = b - head
+            scale = b / head
+            inc = np.floor(inc * scale).astype(np.int64)
+            inc[~carrier] = 0
+            head = int(inc.sum() - inc[last])
+        inc[last] = b - head
         return self._record(inc)
 
     def allocate_all(self, duration_fn) -> np.ndarray:
@@ -189,20 +257,33 @@ class IDPAPartitioner(_BaseAllocator):
             self.next_batch(duration_fn(self.totals))
         return self.totals.copy()
 
+    def state_dict(self) -> dict:
+        state = super().state_dict()
+        state["per_sample_time"] = self.per_sample_time.tolist()
+        return state
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        self.per_sample_time = np.asarray(state["per_sample_time"],
+                                          dtype=np.float64)
+
 
 @dataclasses.dataclass
 class UDPAPartitioner(_BaseAllocator):
     """Uniform baseline of Fig. 14: equal split, all at once or per batch."""
 
-    def first_batch(self) -> np.ndarray:
-        return self.next_batch(None)
+    def first_batch(self, active=None) -> np.ndarray:
+        return self.next_batch(None, active=active)
 
-    def next_batch(self, _durations=None) -> np.ndarray:
+    def next_batch(self, _durations=None, active=None) -> np.ndarray:
         if self.done:
             raise RuntimeError("all batches already allocated")
+        mask = self._active_mask(active)
         b = self.batch_size
-        alloc = np.full(self.num_nodes, b // self.num_nodes, dtype=np.int64)
-        alloc[-1] = b - int(alloc[:-1].sum())
+        k = int(mask.sum())
+        alloc = np.where(mask, b // k, 0).astype(np.int64)
+        last = int(np.flatnonzero(mask)[-1])
+        alloc[last] = b - int(alloc.sum() - alloc[last])
         return self._record(alloc)
 
     def allocate_all(self, duration_fn=None) -> np.ndarray:

@@ -82,7 +82,7 @@ class ParameterServer:
         self.comm_bytes += self.weight_bytes
         return self.global_weights, self.version
 
-    def pull_all_stacked(self):
+    def pull_all_stacked(self, active=None):
         """All m workers pull at once: one node-stacked replica tree.
 
         Bookkeeping is identical to m individual ``pull`` calls (m
@@ -92,6 +92,10 @@ class ParameterServer:
         trains on.  Ownership of the stack transfers to the caller (the
         fused round donates its buffers); a fresh pull re-broadcasts from
         the global weights only when no cached stack is available.
+
+        ``active`` (per-worker bools) marks failed nodes: they do not
+        pull, so they are not charged a transfer and their base version
+        stays where it was — Eq. 11 counts only traffic that happened.
         """
         if self._stacked is not None and self._stacked_version == self.version:
             stacked, self._stacked = self._stacked, None
@@ -100,10 +104,14 @@ class ParameterServer:
             stacked = broadcast_tree(self.global_weights, self.num_workers)
             if self.mesh is not None:     # place node j's replica on device j
                 stacked = jax.device_put(stacked, self._node_sharding)
+        pulls = 0
         for j in range(self.num_workers):
+            if active is not None and not active[j]:
+                continue
             self._base[j] = self.global_weights
             self._base_version[j] = self.version
-        self.comm_bytes += self.num_workers * self.weight_bytes
+            pulls += 1
+        self.comm_bytes += pulls * self.weight_bytes
         return stacked, self.version
 
     def outstanding_versions(self, exclude: Optional[int] = None):
@@ -176,11 +184,23 @@ class ParameterServer:
 
     def push_sgwu(self, submissions: list[tuple[int, Any, float]],
                   virtual_time: float = 0.0):
-        """SGWU: barrier-merge all workers' weights with Eq. (7)."""
+        """SGWU: barrier-merge all workers' weights with Eq. (7).
+
+        A submission whose weights are ``None`` marks a node that MISSED
+        the barrier (failed mid-round): it enters the merge as the current
+        global weights with weight 0 — mathematically excluded — and,
+        because its push never arrived, adds no communication volume.
+        """
         if len(submissions) != self.num_workers:
             raise RuntimeError("SGWU requires a submission from every worker")
         locals_, accs = [], []
         for worker, w, q in submissions:
+            if w is None:                # missed the barrier: no transfer
+                locals_.append(self.global_weights)
+                accs.append(0.0)
+                self.update_log.append(
+                    Submission(worker, self.version, 0.0, virtual_time))
+                continue
             locals_.append(w)
             accs.append(q)
             self.comm_bytes += self.weight_bytes
@@ -194,17 +214,28 @@ class ParameterServer:
 
     def push_sgwu_stacked(self, stacked_weights,
                           accuracies: Sequence[float],
-                          virtual_time: float = 0.0):
+                          virtual_time: float = 0.0, active=None):
         """SGWU barrier merge against the node-stacked representation.
 
         ``stacked_weights`` is ONE pytree with a leading node axis of size
         m (worker j's weights at index j); its buffers are DONATED to the
         merged global weights — callers must not reuse the stack after the
-        push.  Bookkeeping matches m individual submissions.
+        push.  Bookkeeping matches m individual submissions.  ``active``
+        marks nodes that missed the barrier (failed mid-round): they must
+        arrive with accuracy 0 (Eq. 7 excludes them) and are not charged
+        a transfer — their push never happened.
         """
         if len(accuracies) != self.num_workers:
             raise RuntimeError("SGWU requires a submission from every worker")
         for worker, q in enumerate(accuracies):
+            if active is not None and not active[worker]:
+                if float(q) != 0.0:
+                    raise ValueError(
+                        f"node {worker} missed the barrier but carries "
+                        f"merge weight {q!r} — dead nodes must merge at 0")
+                self.update_log.append(
+                    Submission(worker, self.version, 0.0, virtual_time))
+                continue
             self.comm_bytes += self.weight_bytes
             self.update_log.append(
                 Submission(worker, self.version, float(q), virtual_time))
@@ -225,3 +256,33 @@ class ParameterServer:
     def expected_comm_bytes(self, iterations: int) -> int:
         """Eq. (11): C = 2 c_w * m * K."""
         return 2 * self.weight_bytes * self.num_workers * iterations
+
+    # ------------------------------------------------------------------
+    # crash-safe checkpointing: the host-side bookkeeping (version
+    # counters, per-worker base versions, the Eq. 9-11 accounting and the
+    # full version log) as a JSON-able dict.  The weight payloads
+    # themselves (global weights, per-worker base snapshots) travel in the
+    # engine snapshot's ARRAY tree — this dict is everything else a
+    # resumed server needs so its next gamma/comm computation is
+    # bit-identical to the uninterrupted run's.
+    def state_dict(self) -> dict:
+        return {
+            "version": self.version,
+            "num_updates": self.num_updates,
+            "comm_bytes": self.comm_bytes,
+            "base_version": {str(w): v
+                             for w, v in self._base_version.items()},
+            "update_log": [[s.worker, s.base_version, s.accuracy,
+                            s.virtual_time] for s in self.update_log],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.version = int(state["version"])
+        self.num_updates = int(state["num_updates"])
+        self.comm_bytes = int(state["comm_bytes"])
+        self._base_version = {int(w): int(v)
+                              for w, v in state["base_version"].items()}
+        self.update_log = [Submission(int(w), int(bv), float(q), float(vt))
+                           for w, bv, q, vt in state["update_log"]]
+        self._stacked = None
+        self._stacked_version = -1

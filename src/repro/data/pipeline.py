@@ -67,15 +67,27 @@ class IDPADataset:
     def totals(self) -> np.ndarray:
         return self.part.totals
 
-    def report_durations(self, durations) -> bool:
-        """Feed measured per-node durations; returns True if re-allocated."""
+    def report_durations(self, durations, active=None) -> bool:
+        """Feed measured per-node durations; returns True if re-allocated.
+
+        ``active`` masks failed nodes out of the next allocation batch
+        (node churn): a dead node keeps its existing stripe but receives
+        nothing new until it rejoins.
+        """
         if self.part.done:
             return False
         if isinstance(self.part, IDPAPartitioner):
-            self.part.next_batch(durations)
+            self.part.next_batch(durations, active=active)
         else:
-            self.part.next_batch(None)
+            self.part.next_batch(None, active=active)
         return True
+
+    # -- crash-safe checkpointing: the partitioner's incremental state ---
+    def state_dict(self) -> dict:
+        return self.part.state_dict()
+
+    def load_state_dict(self, state: dict) -> None:
+        self.part.load_state_dict(state)
 
     def node_views(self) -> list[np.ndarray]:
         """Contiguous index stripes per node (no migration — paper §3.3.1)."""

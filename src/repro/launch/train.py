@@ -27,8 +27,9 @@ import numpy as np
 
 from repro import configs
 from repro.checkpointing import checkpoint
-from repro.core.bpt_trainer import BPTTrainer
+from repro.core.bpt_trainer import BPTTrainer, TrainHooks
 from repro.core.engine import ENGINES, engine_config
+from repro.core.faults import FaultSchedule
 from repro.core.types import TrainConfig
 from repro.data.pipeline import IDPADataset, host_batch, pack_sequences
 from repro.data.synthetic import lm_corpus
@@ -76,6 +77,19 @@ def main(argv=None):
     ap.add_argument("--rows", type=int, default=512)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save a weight checkpoint AND a resumable "
+                    "train-state checkpoint into --ckpt-dir every N merge "
+                    "events (0 = only the final weights)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest train-state checkpoint from "
+                    "--ckpt-dir before the first round (a fresh dir just "
+                    "starts from scratch — safe to always pass)")
+    ap.add_argument("--faults", default="",
+                    help="fault schedule: comma-separated "
+                    "kind:node@event[xfactor] atoms, e.g. "
+                    "'fail:1@3,rejoin:1@6,slow:2@4x2.5' — node churn "
+                    "injected into the outer layer (core.faults)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -127,21 +141,40 @@ def main(argv=None):
     else:
         tc = TrainConfig(outer_strategy=args.outer,
                          device_outer=args.device_outer, **common)
+    faults = FaultSchedule.from_spec(args.faults, num_nodes=args.nodes) \
+        if args.faults else None
     trainer = BPTTrainer(loss_fn, params, ds, tc,
-                         batch_size=args.batch_size, speed_factors=speeds)
+                         batch_size=args.batch_size, speed_factors=speeds,
+                         fault_schedule=faults)
+    hooks = None
+    if args.ckpt_every:
+        if not args.ckpt_dir:
+            raise SystemExit("--ckpt-every needs --ckpt-dir")
+        hooks = TrainHooks(checkpoint_every=args.ckpt_every,
+                           checkpoint_dir=args.ckpt_dir,
+                           resume=args.resume)
+    elif args.resume:
+        raise SystemExit("--resume needs --ckpt-every and --ckpt-dir")
     t0 = time.time()
-    report = trainer.train(args.rounds)
+    report = trainer.train(args.rounds, hooks)
     wall = time.time() - t0
     if report.fallback:
         print(f"[train] engine fallback: {report.fallback}")
     print(f"[train] done in {wall:.1f}s wall; report:")
     print(json.dumps(report.summary(), indent=2, default=str))
-    first, last = report.losses[0], report.losses[-1]
-    print(f"[train] loss {first:.4f} -> {last:.4f} "
-          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
-    if args.ckpt_dir:
+    if report.losses:
+        first, last = report.losses[0], report.losses[-1]
+        print(f"[train] loss {first:.4f} -> {last:.4f} "
+              f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    else:
+        # --resume from a state checkpoint of an already-finished run:
+        # nothing left to train, no new events
+        print("[train] resumed past the final round; no new rounds ran")
+    if args.ckpt_dir and report.losses:
+        # last_event, not steps: on a resumed run, steps counts only the
+        # events this process produced and would mislabel the checkpoint
         path = checkpoint.save(args.ckpt_dir, report.final_params,
-                               step=report.steps,
+                               step=report.last_event,
                                metadata={"arch": cfg.name})
         print(f"[train] checkpoint: {path}")
     return report

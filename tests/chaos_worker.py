@@ -1,0 +1,71 @@
+"""Training worker for the SIGKILL chaos test (tests/test_chaos.py).
+
+Runs a small deterministic fused-SGWU training job, checkpointing params
+AND resumable train state after every merge event, printing ``EVENT n``
+after each event so the parent can kill it mid-run.  ``--resume`` restores
+the latest state checkpoint first — a killed run relaunched with the same
+command line continues losslessly.  The final merged weights are published
+as step ``FINAL_STEP`` so the parent can compare runs.
+
+Not a test file: invoked as ``python tests/chaos_worker.py`` by
+test_chaos.py (and usable by hand for debugging).
+"""
+import argparse
+
+import jax
+
+FINAL_STEP = 10_000
+
+
+def build_trainer(nodes: int, seed: int = 0):
+    import numpy as np  # noqa: F401  (kept local: worker stays import-light)
+    from repro.core.bpt_trainer import BPTTrainer
+    from repro.core.types import TrainConfig
+    from repro.data.pipeline import IDPADataset
+    from repro.data.synthetic import image_dataset
+    from repro.models.cnn import CNNConfig, cnn_loss, init_cnn
+
+    cfg = CNNConfig(name="chaos", image_size=8, conv_layers=1, filters=4,
+                    fc_layers=1, fc_neurons=32)
+    xs, ys = image_dataset(64 * nodes * 2, size=8, seed=0)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    # batches=1: the allocation is settled up front, so the only inter-run
+    # nondeterminism (measured durations feeding IDPA) is out of play and
+    # the resumed trajectory must be BIT-identical to the uninterrupted one
+    ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=nodes,
+                     batches=1)
+    tc = TrainConfig(outer_nodes=nodes, outer_strategy="sgwu",
+                     fused_outer=True, optimizer="adamw",
+                     learning_rate=2e-3, total_steps=100, warmup_steps=5,
+                     local_steps=2, seed=seed)
+    return BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds,
+                      tc, batch_size=16)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.checkpointing import checkpoint
+    from repro.core.bpt_trainer import TrainHooks
+
+    tr = build_trainer(args.nodes, seed=args.seed)
+    hooks = TrainHooks(checkpoint_every=1, checkpoint_dir=args.ckpt_dir,
+                       resume=args.resume)
+    last = None
+    for ev in tr.run(args.rounds, hooks):
+        last = ev
+        # the checkpoint for this event is already on disk (run() saves
+        # before yielding) — the parent may SIGKILL us any time after this
+        print(f"EVENT {ev.round}", flush=True)
+    checkpoint.save(args.ckpt_dir, last.params, step=FINAL_STEP)
+    print("DONE", flush=True)
+
+
+if __name__ == "__main__":
+    main()

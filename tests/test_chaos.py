@@ -1,0 +1,550 @@
+"""Chaos suite: the elastic outer layer under node churn and process death.
+
+The paper's claim is that AGWU + IDPA absorb heterogeneity and stragglers
+(§3); this suite makes the claim testable under *faults*:
+
+* **Churn convergence** — kill k=2 of m=8 nodes mid-training under the
+  heap (AGWU), fused-vmap and device-sharded (SGWU) engines; training
+  must still converge to the fault-free reference trajectory within
+  ``CHURN_LOSS_TOL`` (dead nodes lose their in-flight minibatches, so the
+  trajectories diverge slightly — the tolerance bounds how much).
+* **Crash-safe resumption** — in-process: break the event stream, build a
+  fresh trainer, resume from the state checkpoint, and require the final
+  merged weights BIT-identical to an uninterrupted run.  Out-of-process:
+  SIGKILL a training subprocess between rounds and require the resumed
+  run's final weights to match the uninterrupted run's within 1e-5
+  (acceptance bound; on CPU they match exactly).
+* **Measured-duration IDPA** — the partitioner must react to *measured*
+  per-round durations: perturbing one node's speed (or injecting a
+  ``slow`` fault) must shrink that node's next allocation batch.
+* **Adversarial AGWU heaps** — duplicate completion timestamps, a
+  straggler whose pushes arrive after everyone else finished, and pinned
+  Eq. 10 gamma regression values under churn.
+
+AGWU's virtual clock is built from measured wall times, so its pop order
+is timing-dependent run to run; every heap assertion here pins per-node
+durations (``_pin_durations``) to make the event order — and therefore
+the weight math — deterministic.
+
+Set ``REPRO_CHAOS_TRACE=<path>`` to append a JSONL RoundEvent trace of
+every churn run (the CI multidevice job uploads it on failure).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.param_server as param_server_module
+from repro.checkpointing import checkpoint
+from repro.core.bpt_trainer import BPTTrainer, TrainHooks
+from repro.core.faults import FaultEvent, FaultSchedule
+from repro.core.types import TrainConfig
+from repro.data.pipeline import IDPADataset
+from repro.data.synthetic import image_dataset
+from repro.models.cnn import CNNConfig, cnn_loss, init_cnn
+
+NDEV = len(jax.devices())
+
+# documented tolerance for the churn-vs-reference final loss: losing 2 of
+# 8 nodes drops those nodes' minibatches from a handful of merges, which
+# perturbs — but must not derail — the trajectory
+CHURN_LOSS_TOL = 0.25
+
+
+def need_devices(m):
+    return pytest.mark.skipif(
+        NDEV < m, reason=f"needs {m} devices (have {NDEV}); run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _make_trainer(m=4, batches=1, faults=None, speed_factors=None,
+                  seed=0, **tc_kwargs):
+    cfg = CNNConfig(name="chaos", image_size=8, conv_layers=1, filters=4,
+                    fc_layers=1, fc_neurons=32)
+    xs, ys = image_dataset(64 * m * 2, size=8, seed=0)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    ds = IDPADataset({"images": xs, "labels": ys}, num_nodes=m,
+                     batches=batches)
+    tc_kwargs.setdefault("outer_strategy", "sgwu")
+    tc = TrainConfig(outer_nodes=m, optimizer="adamw", learning_rate=2e-3,
+                     total_steps=100, warmup_steps=5, local_steps=2,
+                     seed=seed, **tc_kwargs)
+    return BPTTrainer(lambda p, b: (cnn_loss(p, b, cfg), {}), params, ds,
+                      tc, batch_size=16, fault_schedule=faults,
+                      speed_factors=speed_factors)
+
+
+ENGINE_KW = {
+    "vmap": dict(outer_strategy="sgwu", fused_outer=True),
+    "sequential": dict(outer_strategy="sgwu", fused_outer=False),
+    "device": dict(outer_strategy="sgwu", device_outer=True),
+    "heap": dict(outer_strategy="agwu"),
+}
+
+
+def _pin_durations(tr, per_node):
+    """Replace measured wall durations with fixed per-node values so the
+    AGWU heap order (and hence the weight math) is deterministic."""
+    per_node = np.asarray(per_node, dtype=np.float64)
+    orig = tr._local_round
+
+    def pinned(params, opt_state, node, step):
+        p, o, loss, _ = orig(params, opt_state, node, step)
+        return p, o, loss, float(per_node[node])
+
+    tr._local_round = pinned
+
+
+def _drain(tr, rounds, hooks=None):
+    return list(tr.run(rounds, hooks))
+
+
+def _final_weights(ev):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(ev.params)]
+
+
+def _max_diff(ws_a, ws_b):
+    return max(float(np.abs(a - b).max()) for a, b in zip(ws_a, ws_b))
+
+
+def _record_trace(tag, events):
+    path = os.environ.get("REPRO_CHAOS_TRACE", "")
+    if not path:
+        return
+    with open(path, "a") as f:
+        for ev in events:
+            f.write(json.dumps({
+                "tag": tag, "round": ev.round, "node": ev.node,
+                "loss": float(ev.loss),
+                "virtual_clock": float(ev.virtual_clock),
+                "sync_wait": float(ev.sync_wait),
+                "comm_bytes": int(ev.comm_bytes),
+                "node_status": None if ev.node_status is None
+                else [float(s) for s in ev.node_status],
+                "durations": None if ev.durations is None
+                else [float(d) for d in ev.durations],
+            }) + "\n")
+
+
+# ----------------------------------------------------------------------
+# churn convergence: kill k=2 of m=8 mid-training
+# ----------------------------------------------------------------------
+class TestChurnConvergence:
+    @pytest.mark.parametrize("seed", [0, 1])   # fixed-seed sweep (CI)
+    @pytest.mark.parametrize("engine", [
+        "heap", "vmap", pytest.param("device", marks=need_devices(8))])
+    def test_k2_of_m8_converges_to_reference(self, engine, seed):
+        m, rounds = 8, 4
+        # heap indices are push counts (m per virtual round); barrier
+        # indices are rounds — both kill nodes 2 and 5 early in the run
+        spec = "fail:2@4,fail:5@8" if engine == "heap" \
+            else "fail:2@1,fail:5@2"
+        faults = FaultSchedule.from_spec(spec, num_nodes=m)
+
+        ref = _make_trainer(m=m, seed=seed, **ENGINE_KW[engine])
+        churn = _make_trainer(m=m, seed=seed, faults=faults,
+                              **ENGINE_KW[engine])
+        if engine == "heap":
+            durs = 1.0 + 0.1 * np.arange(m)
+            _pin_durations(ref, durs)
+            _pin_durations(churn, durs)
+
+        ref_events = _drain(ref, rounds)
+        churn_events = _drain(churn, rounds)
+        _record_trace(f"churn-{engine}-seed{seed}", churn_events)
+
+        assert churn_events, "churn run produced no events"
+        # the dead nodes' remaining work is lost, so the AGWU stream is
+        # shorter than the fault-free m*rounds
+        if engine == "heap":
+            assert len(churn_events) < len(ref_events)
+            dead_after = {2: 4, 5: 8}
+            for ev in churn_events:
+                for node, cutoff in dead_after.items():
+                    assert not (ev.node == node and ev.round >= cutoff), \
+                        f"dead node {node} pushed at event {ev.round}"
+        ref_loss = ref_events[-1].loss
+        churn_loss = churn_events[-1].loss
+        assert np.isfinite(churn_loss)
+        assert abs(churn_loss - ref_loss) < CHURN_LOSS_TOL, \
+            (f"{engine}: churn final loss {churn_loss:.4f} diverged from "
+             f"reference {ref_loss:.4f} beyond {CHURN_LOSS_TOL}")
+        # and training stayed healthy after losing 2 nodes.  AGWU events
+        # carry single-node losses, so at this run length the half-run
+        # means sit within noise of each other — allow a small margin;
+        # an actual post-churn blow-up trips CHURN_LOSS_TOL above long
+        # before it trips this.
+        losses = [ev.loss for ev in churn_events]
+        half = len(losses) // 2
+        assert np.mean(losses[half:]) < np.mean(losses[:half]) + 0.05
+
+    def test_rejoined_node_pushes_again(self):
+        m = 4
+        faults = FaultSchedule.from_spec("fail:1@2,rejoin:1@8", num_nodes=m)
+        tr = _make_trainer(m=m, faults=faults, outer_strategy="agwu")
+        _pin_durations(tr, np.ones(m))
+        events = _drain(tr, 4)
+        _record_trace("rejoin-heap", events)
+        dead_window = [ev for ev in events if 2 <= ev.round < 8]
+        assert all(ev.node != 1 for ev in dead_window)
+        assert any(ev.node == 1 and ev.round >= 8 for ev in events), \
+            "rejoined node never pushed again"
+        # the in-flight push was lost, but the rejoined node REDOES that
+        # round (rounds_done never advanced), so the stream is full length
+        assert len(events) == 4 * m
+
+    def test_all_dead_raises(self):
+        faults = FaultSchedule.from_spec("fail:0@1,fail:1@1", num_nodes=2)
+        tr = _make_trainer(m=2, faults=faults, fused_outer=True)
+        with pytest.raises(RuntimeError, match="leaves no node alive"):
+            _drain(tr, 3)
+
+
+# ----------------------------------------------------------------------
+# node_status / durations observability on the event stream
+# ----------------------------------------------------------------------
+class TestNodeStatusObservability:
+    def test_barrier_status_and_slow_durations(self):
+        m = 4
+        faults = FaultSchedule(
+            [FaultEvent(round=1, node=0, kind="slow", factor=3.0),
+             FaultEvent(round=2, node=2, kind="fail")], num_nodes=m)
+        tr = _make_trainer(m=m, faults=faults, fused_outer=True)
+        events = _drain(tr, 4)
+        assert all(ev.node_status is not None for ev in events)
+        assert np.all(events[0].node_status == 1.0)
+        assert events[1].node_status[0] == 3.0
+        assert events[2].node_status[2] == 0.0      # failed
+        # the slow factor multiplies the virtual duration exactly
+        # (equal speed factors, equal wall share)
+        d = events[1].durations
+        assert np.isclose(d[0] / d[1], 3.0)
+        # a dead node contributes no duration and no sync-wait
+        assert events[2].durations[2] == 0.0
+
+    def test_churn_free_runs_emit_no_status(self):
+        tr = _make_trainer(m=2, fused_outer=True)
+        events = _drain(tr, 2)
+        assert all(ev.node_status is None for ev in events)
+        assert all(ev.durations is not None for ev in events)
+
+    def test_dead_node_not_charged_comm(self):
+        """Eq. 11 counts only transfers that happened: a round with a dead
+        node moves 2(m-1) payloads, not 2m."""
+        m = 4
+        faults = FaultSchedule.from_spec("fail:3@1", num_nodes=m)
+        tr = _make_trainer(m=m, faults=faults, fused_outer=True)
+        events = _drain(tr, 3)
+        per_round = np.diff([0] + [ev.comm_bytes for ev in events])
+        wb = events[0].comm_bytes // (2 * m)   # one weight payload
+        assert per_round[0] == 2 * m * wb
+        assert per_round[1] == 2 * (m - 1) * wb
+        assert per_round[2] == 2 * (m - 1) * wb
+
+
+# ----------------------------------------------------------------------
+# in-process crash/resume: bit-identical continuation
+# ----------------------------------------------------------------------
+class TestCrashResume:
+    @pytest.mark.parametrize("engine", ["vmap", "sequential", "heap"])
+    def test_resume_is_bit_identical(self, engine, tmp_path):
+        rounds, m = 6, 4
+        kw = ENGINE_KW[engine]
+        durs = 1.0 + 0.25 * np.arange(m)
+
+        ref = _make_trainer(m=m, **kw)
+        if engine == "heap":
+            _pin_durations(ref, durs)
+        ref_events = _drain(ref, rounds)
+
+        # crash: consume part of the stream, then abandon the trainer
+        crashed = _make_trainer(m=m, **kw)
+        if engine == "heap":
+            _pin_durations(crashed, durs)
+        hooks = TrainHooks(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+        consumed = 0
+        stop_at = 8 if engine == "heap" else 3
+        for ev in crashed.run(rounds, hooks):
+            consumed += 1
+            if consumed >= stop_at:
+                break
+
+        # resume: a FRESH trainer (fresh RNG, fresh dataset, fresh engine)
+        resumed = _make_trainer(m=m, **kw)
+        if engine == "heap":
+            _pin_durations(resumed, durs)
+        hooks2 = TrainHooks(checkpoint_every=2,
+                            checkpoint_dir=str(tmp_path), resume=True)
+        res_events = _drain(resumed, rounds, hooks2)
+
+        # resumes from the last state checkpoint (every 2 events), so it
+        # replays at most 1 event and never the whole prefix
+        last_ckpt = (stop_at // 2) * 2
+        assert len(res_events) == len(ref_events) - last_ckpt
+        diff = _max_diff(_final_weights(ref_events[-1]),
+                         _final_weights(res_events[-1]))
+        assert diff == 0.0, \
+            f"{engine}: resumed weights differ from uninterrupted (max " \
+            f"abs diff {diff:.3e})"
+        # the loss trail must splice exactly too
+        ref_tail = [ev.loss for ev in ref_events[last_ckpt:]]
+        res_tail = [ev.loss for ev in res_events]
+        assert ref_tail == res_tail
+
+    def test_resume_with_empty_dir_starts_fresh(self, tmp_path):
+        tr = _make_trainer(m=2, fused_outer=True)
+        hooks = TrainHooks(checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                           resume=True)
+        events = _drain(tr, 3)
+        assert len(events) == 3
+
+    def test_resume_restores_server_log_and_idpa_state(self, tmp_path):
+        """The state checkpoint carries the parameter-server bookkeeping
+        and the IDPA allocation state — a resumed run CONTINUES the comm
+        accounting and the incremental allocation, it does not restart
+        them."""
+        m, rounds = 4, 6
+        tr = _make_trainer(m=m, batches=2, fused_outer=True)
+        hooks = TrainHooks(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+        consumed = 0
+        for ev in tr.run(rounds, hooks):
+            consumed += 1
+            if consumed >= 4:     # state checkpoint for event 4 on disk
+                break
+
+        tr2 = _make_trainer(m=m, batches=2, fused_outer=True)
+        hooks2 = TrainHooks(checkpoint_every=2,
+                            checkpoint_dir=str(tmp_path), resume=True)
+        events = _drain(tr2, rounds, hooks2)
+        assert len(events) == rounds - 4
+        # comm continuity: every SGWU round moves 2m weight payloads, so
+        # the resumed run's first event carries FIVE rounds of traffic —
+        # the four pre-crash rounds were restored, not reset
+        wb = events[0].comm_bytes // (2 * m * 5)
+        assert events[0].comm_bytes == 2 * m * 5 * wb
+        assert events[-1].comm_bytes == 2 * m * rounds * wb
+        # IDPA: both allocation batches landed exactly once across the two
+        # processes and the full dataset is covered
+        part = tr2.dataset.part
+        assert part.done and len(part.history) == part.num_batches
+        assert tr2.dataset.totals.sum() == \
+            part.batch_size * part.num_batches
+
+
+# ----------------------------------------------------------------------
+# out-of-process: SIGKILL between rounds, resume losslessly
+# ----------------------------------------------------------------------
+class TestSigkill:
+    def _spawn(self, ckpt_dir, resume=False, rounds=6):
+        cmd = [sys.executable,
+               str(Path(__file__).parent / "chaos_worker.py"),
+               "--ckpt-dir", str(ckpt_dir), "--rounds", str(rounds)]
+        if resume:
+            cmd.append("--resume")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src") + \
+            os.pathsep + env.get("PYTHONPATH", "")
+        return subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True,
+                                env=env)
+
+    def test_sigkill_between_rounds_resumes_losslessly(self, tmp_path):
+        from chaos_worker import FINAL_STEP, build_trainer
+
+        ref_dir, kill_dir = tmp_path / "ref", tmp_path / "kill"
+        rounds = 6
+
+        # uninterrupted reference
+        p = self._spawn(ref_dir, rounds=rounds)
+        out, _ = p.communicate(timeout=600)
+        assert p.returncode == 0 and "DONE" in out
+
+        # victim: SIGKILL after it reports event 2 (its checkpoint for
+        # event 2 is on disk before the line is printed)
+        p = self._spawn(kill_dir, rounds=rounds)
+        seen = 0
+        deadline = time.time() + 600
+        for line in p.stdout:
+            if line.startswith("EVENT"):
+                seen += 1
+                if seen >= 3:
+                    os.kill(p.pid, signal.SIGKILL)
+                    break
+            assert time.time() < deadline
+        p.wait(timeout=60)
+        assert p.returncode != 0, "victim was supposed to die"
+        assert checkpoint.latest_step(str(kill_dir)) is not None
+        assert checkpoint.latest_step(str(kill_dir), kind="state") \
+            is not None
+
+        # resume with the same command line + --resume
+        p = self._spawn(kill_dir, resume=True, rounds=rounds)
+        out, _ = p.communicate(timeout=600)
+        assert p.returncode == 0 and "DONE" in out
+
+        # acceptance: resumed final weights match the uninterrupted run's
+        # to 1e-5 (bit-exact on CPU)
+        like = build_trainer(4).params0
+        w_ref, _ = checkpoint.restore(str(ref_dir), like, step=FINAL_STEP)
+        w_res, _ = checkpoint.restore(str(kill_dir), like, step=FINAL_STEP)
+        diff = _max_diff(
+            [np.asarray(x) for x in jax.tree_util.tree_leaves(w_ref)],
+            [np.asarray(x) for x in jax.tree_util.tree_leaves(w_res)])
+        assert diff <= 1e-5, f"resumed run diverged: max diff {diff:.3e}"
+
+
+# ----------------------------------------------------------------------
+# measured-duration IDPA: allocation follows observed speed
+# ----------------------------------------------------------------------
+class TestMeasuredDurationIDPA:
+    def test_slow_node_gets_smaller_allocation(self):
+        """Perturb one node's speed and watch IDPA re-allocate: the
+        allocation is driven by MEASURED RoundEvent durations, not nominal
+        frequencies (all frequencies here are equal)."""
+        m = 4
+        speeds = np.array([1.0, 1.0, 1.0, 6.0])   # node 3: 6x slower
+        tr = _make_trainer(m=m, batches=2, fused_outer=True,
+                           speed_factors=speeds)
+        events = _drain(tr, 3)
+        part = tr.dataset.part
+        assert part.done and len(part.history) == 2
+        # batch 1 was frequency-proportional (equal); batch 2 reacted to
+        # the measured durations — the slow node's increment collapses
+        inc = part.history[1]
+        assert inc[3] < inc[0]
+        assert inc[3] < part.history[0][3]
+        # and the durations the partitioner saw are on the event stream
+        assert events[0].durations is not None
+        assert events[0].durations[3] > 3 * events[0].durations[0]
+
+    def test_slow_fault_shrinks_heap_allocation(self):
+        """A `slow` fault mid-AGWU-run flows through the measured-duration
+        feedback into the next allocation batch."""
+        m = 4
+        faults = FaultSchedule.from_spec("slow:0@2x8.0", num_nodes=m)
+        tr = _make_trainer(m=m, batches=3, outer_strategy="agwu",
+                           faults=faults)
+        _pin_durations(tr, np.ones(m))
+        _drain(tr, 4)
+        part = tr.dataset.part
+        assert part.done and len(part.history) == 3
+        # batch 2 was allocated before the slow fault's durations landed
+        # (node 0's slowed round-2 push comes later); batch 3 reacts
+        assert abs(part.history[1][0] - part.history[1][1]) <= 1
+        inc = part.history[2]
+        assert inc[0] < inc[1], \
+            "slowed node kept its allocation share despite 8x durations"
+
+    def test_dead_node_keeps_stripe_gets_no_increment(self):
+        """§3.3.1: no migration — a dead node keeps what it had, but the
+        next allocation batch lands entirely on the survivors."""
+        m = 4
+        faults = FaultSchedule.from_spec("fail:2@2", num_nodes=m)
+        tr = _make_trainer(m=m, batches=2, outer_strategy="agwu",
+                           faults=faults)
+        _pin_durations(tr, np.ones(m))
+        _drain(tr, 4)
+        part = tr.dataset.part
+        assert part.done and len(part.history) == 2
+        first, second = part.history
+        assert second[2] == 0                       # nothing new when dead
+        assert part.totals[2] == first[2]           # stripe kept
+        b = part.num_samples // part.num_batches
+        assert second.sum() == b                    # batch fully landed
+
+
+# ----------------------------------------------------------------------
+# adversarial AGWU heaps
+# ----------------------------------------------------------------------
+# pinned Eq. 10 gamma traces (6 decimals): deterministic given the pinned
+# durations — any change to heap ordering, staleness accounting or the
+# churn transitions shows up as a drift here.  Regenerate by printing
+# `gamma_log` from the matching test.
+GAMMAS_STRAGGLER = [0.333333, 0.211942, 0.186324, 0.230237, 0.254275,
+                    0.328933, 0.390166, 0.287004, 0.435954]
+GAMMAS_CHURN = [0.333333, 0.211942, 0.186324, 0.230237, 0.326496,
+                0.290461, 0.351311, 0.312736, 0.4055]
+
+
+@pytest.fixture
+def gamma_log(monkeypatch):
+    """Record every Eq. 10 gamma the parameter server computes."""
+    rec = []
+    orig = param_server_module.agwu_gamma
+
+    def wrapper(*a, **k):
+        g = orig(*a, **k)
+        rec.append(round(float(g), 6))
+        return g
+
+    monkeypatch.setattr(param_server_module, "agwu_gamma", wrapper)
+    return rec
+
+
+class TestAdversarialHeap:
+    def test_duplicate_timestamps_order_by_node(self):
+        """Identical completion times on every push: the heap must break
+        ties deterministically (by node index) and emit every event."""
+        m, rounds = 4, 3
+        tr = _make_trainer(m=m, outer_strategy="agwu")
+        _pin_durations(tr, np.ones(m))
+        events = _drain(tr, rounds)
+        assert len(events) == m * rounds
+        order = [ev.node for ev in events]
+        assert order == list(range(m)) * rounds
+        # the virtual clock never runs backwards within a node's stream
+        for j in range(m):
+            clocks = [ev.virtual_clock for ev in events if ev.node == j]
+            assert clocks == sorted(clocks)
+
+    def test_straggler_pushes_arrive_after_everyone_finished(self,
+                                                            gamma_log):
+        """One node 50x slower: its 2nd..Kth pushes pop after every other
+        node completed all rounds; its gamma reflects maximal staleness."""
+        m, rounds = 3, 3
+        tr = _make_trainer(m=m, outer_strategy="agwu")
+        _pin_durations(tr, np.array([1.0, 1.0, 50.0]))
+        events = _drain(tr, rounds)
+        assert len(events) == m * rounds
+        assert [ev.node for ev in events[-2:]] == [2, 2]
+        fast_done = max(i for i, ev in enumerate(events) if ev.node != 2)
+        assert fast_done == m * rounds - 3          # straggler owns the tail
+        # Eq. 10 regression pin: the straggler's late pushes carry the
+        # smallest gammas of the run (stalest base version)
+        assert len(gamma_log) == m * rounds
+        straggler_gammas = [g for ev, g in zip(events, gamma_log)
+                            if ev.node == 2]
+        assert min(gamma_log) == min(straggler_gammas)
+        assert gamma_log == GAMMAS_STRAGGLER, \
+            f"gamma trace drifted: {gamma_log}"
+
+    def test_gamma_pinned_under_churn(self, gamma_log):
+        """Eq. 10 staleness weights under fail/rejoin: pinned regression
+        values — any change to the heap's churn ordering shows up here."""
+        m, rounds = 3, 3
+        faults = FaultSchedule.from_spec("fail:1@2,rejoin:1@5", num_nodes=m)
+        tr = _make_trainer(m=m, faults=faults, outer_strategy="agwu")
+        _pin_durations(tr, np.array([1.0, 1.1, 1.2]))
+        events = _drain(tr, rounds)
+        _record_trace("gamma-churn", events)
+        assert gamma_log == GAMMAS_CHURN, \
+            f"gamma trace drifted: {gamma_log}"
+
+    def test_lost_push_never_reaches_server(self):
+        """A node that fails mid-round loses exactly its in-flight push:
+        the server's update count equals the emitted event count."""
+        m, rounds = 4, 3
+        faults = FaultSchedule.from_spec("fail:3@2", num_nodes=m)
+        tr = _make_trainer(m=m, faults=faults, outer_strategy="agwu")
+        _pin_durations(tr, np.ones(m))
+        events = _drain(tr, rounds)
+        # node 3 died before its first push popped: the survivors' 3*3
+        # pushes are the whole stream, node 3 contributes nothing
+        assert len(events) == (m - 1) * rounds
+        assert all(ev.node != 3 for ev in events)

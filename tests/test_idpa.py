@@ -104,3 +104,122 @@ class TestBalanceDegree:
     def test_range(self, loads):
         b = workload_balance_degree(loads)
         assert 0.0 < b <= 1.0
+
+
+class TestChurnInvariants:
+    """Node-churn extensions of Alg. 3.1: allocation under an active mask
+    must stay proportional to measured power, cover each batch exactly
+    once, hand a zero-capacity node zero work without starving the batch,
+    and never migrate a dead node's existing stripe (§3.3.1)."""
+
+    def test_first_batch_respects_active_mask(self):
+        p = IDPAPartitioner(1200, 4, 2, frequencies=[1, 2, 1, 2])
+        a = p.first_batch(active=[True, False, True, True])
+        assert a[1] == 0 and a.sum() == 600
+        # Eq. (2) over the surviving frequencies [1, 1, 2]
+        assert (a[0], a[2], a[3]) == (150, 150, 300)
+
+    def test_allocation_proportional_to_measured_power(self):
+        p = IDPAPartitioner(4000, 4, 2, frequencies=np.ones(4))
+        p.first_batch()
+        # node 0 measures 2x the per-sample time of nodes 1-2; node 3 dead
+        t = np.array([2.0, 1.0, 1.0, 1.0])
+        inc = p.next_batch(t * np.maximum(p.totals, 1),
+                           active=[True, True, True, False])
+        assert inc[3] == 0
+        assert inc[0] < inc[1]                       # slower => less work
+        assert inc.sum() == 2000                     # batch fully covered
+
+    def test_zero_capacity_node_gets_zero_without_starving(self):
+        p = IDPAPartitioner(1000, 4, 2, frequencies=np.ones(4))
+        p.first_batch()
+        durs = np.array([1.0, np.inf, 1.0, 1.0]) * np.maximum(p.totals, 1)
+        inc = p.next_batch(durs)
+        assert inc[1] == 0
+        assert inc.sum() == 500                      # batch still lands
+
+    def test_dead_node_garbage_durations_ignored(self):
+        # a dead node reports nothing; stale/garbage entries in its slot
+        # must not affect validation or the allocation
+        p = IDPAPartitioner(1000, 3, 2, frequencies=np.ones(3))
+        p.first_batch()
+        inc = p.next_batch([100.0, -1.0, 100.0],
+                           active=[True, False, True])
+        assert inc[1] == 0 and inc.sum() == 500
+
+    def test_no_migration_dead_stripe_kept(self):
+        p = IDPAPartitioner(1200, 3, 3, frequencies=np.ones(3))
+        p.first_batch()
+        stripe = int(p.totals[2])
+        t = np.maximum(p.totals, 1).astype(float)
+        p.next_batch(t, active=[True, True, False])
+        assert p.totals[2] == stripe                 # kept, not migrated
+        # rejoin: the node reports a real duration again and earns work
+        inc = p.next_batch(np.maximum(p.totals, 1).astype(float))
+        assert inc[2] > 0
+
+    def test_active_mask_validation(self):
+        p = IDPAPartitioner(1000, 4, 2, frequencies=np.ones(4))
+        with pytest.raises(ValueError, match="active flag"):
+            p.first_batch(active=[True, False])
+        p2 = IDPAPartitioner(1000, 4, 2, frequencies=np.ones(4))
+        with pytest.raises(ValueError, match="inactive"):
+            p2.first_batch(active=np.zeros(4, dtype=bool))
+
+    def test_all_carriers_infinite_raises(self):
+        p = IDPAPartitioner(1000, 2, 2, frequencies=np.ones(2))
+        p.first_batch()
+        with pytest.raises(ValueError, match="carry"):
+            p.next_batch([np.inf, np.inf])
+
+    def test_udpa_active_mask(self):
+        p = UDPAPartitioner(900, 3, 3)
+        p.first_batch()
+        a = p.next_batch(active=[True, False, True])
+        assert a[1] == 0 and a.sum() == 300
+
+    def test_state_round_trip_mid_churn(self):
+        """Checkpoint/resume mid-churn: a reloaded partitioner produces
+        the identical next allocation (crash-safe training state)."""
+        p = IDPAPartitioner(2000, 4, 4, frequencies=[1, 2, 1, 2])
+        p.first_batch()
+        p.next_batch(np.maximum(p.totals, 1).astype(float),
+                     active=[True, True, True, False])
+        q = IDPAPartitioner(2000, 4, 4, frequencies=[1, 2, 1, 2])
+        q.load_state_dict(p.state_dict())
+        assert q.current_batch == p.current_batch
+        np.testing.assert_array_equal(q.totals, p.totals)
+        t = np.array([1.0, 0.5, 1.0, 0.5])
+        a1 = p.next_batch(t * np.maximum(p.totals, 1))
+        a2 = q.next_batch(t * np.maximum(q.totals, 1))
+        np.testing.assert_array_equal(a1, a2)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(2, 8),
+        a=st.integers(2, 5),
+        seed=st.integers(0, 500),
+        mode=st.sampled_from(["paper", "balanced"]),
+    )
+    def test_batches_sum_exactly_under_random_churn(self, m, a, seed, mode):
+        """Whatever the churn pattern, every allocation batch sums to
+        exactly floor(N/A), increments are non-negative, and masked nodes
+        receive nothing."""
+        rng = np.random.default_rng(seed)
+        N = 200 * m
+        p = IDPAPartitioner(N, m, a, frequencies=1 + rng.random(m),
+                            mode=mode)
+        b = N // a
+        p.first_batch()
+        while not p.done:
+            active = rng.random(m) > 0.3
+            if not active.any():
+                active[int(rng.integers(m))] = True
+            durs = (0.2 + rng.random(m)) * np.maximum(p.totals, 1)
+            if rng.random() < 0.3 and active.sum() > 1:
+                durs[int(np.flatnonzero(active)[0])] = np.inf
+            inc = p.next_batch(durs, active=active)
+            assert inc.sum() == b
+            assert np.all(inc >= 0)
+            assert np.all(inc[~active] == 0)
+        assert p.totals.sum() == b * a
