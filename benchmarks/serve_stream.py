@@ -1,0 +1,151 @@
+"""Request-stream serving benchmark: continuous vs static batching.
+
+Replays ONE Poisson-arrival request stream (exponential gaps, heavy-
+tailed generation lengths — arrivals straddle batch boundaries) through
+both serve engines and measures throughput and latency percentiles.
+Static batching pays two costs continuous batching removes: a group
+only starts when its last member arrives, and the whole group drains at
+the max generation length of its members.
+
+Run:  python -m benchmarks.serve_stream [--report-only] [--json PATH]
+Emits ``name,us_per_call,derived`` CSV rows (house format) on stdout —
+prose goes to stderr — and exits non-zero unless continuous batching
+reaches ``FLOOR``x static throughput (the nightly CI gate).  ``--json``
+writes the measurements + verdict as one JSON document (the
+``BENCH_serve.json`` workflow artifact).  ``--timing model`` swaps the
+measured wall clock for the deterministic cost model (hermetic runs on
+noisy shared runners).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, section
+from repro.core.types import ModelConfig
+from repro.models import lm
+from repro.serving import ServeConfig, make_serve_engine, poisson_requests
+
+N_REQUESTS = 32
+RATE_RPS = 1000.0           # mean 1 ms gap: load-bound, arrivals straddle groups
+SLOTS = 4
+MAX_SEQ = 96
+FLOOR = 1.5                  # continuous >= FLOOR x static throughput
+
+
+def _bench_cfg() -> ModelConfig:
+    return ModelConfig(name="serve-bench", arch_type="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                       d_ff=128, vocab_size=256)
+
+
+def _run_stream(params, cfg, batching: str, timing: str, reqs):
+    """One replay; returns the metrics dict for this engine."""
+    eng = make_serve_engine(params, cfg, ServeConfig(
+        slots=SLOTS, max_seq=MAX_SEQ, batching=batching, timing=timing))
+    if timing == "measured":
+        # warmup replay on the SAME engine: compiles every prompt shape
+        # off the clock (a full run ends with all slots evicted, so the
+        # measured replay starts from a clean cache)
+        for ev in eng.run(reqs):
+            pass
+    tok_ms, ttft, lat = [], [], []
+    tokens = 0
+    makespan = 0.0
+    for ev in eng.run(reqs):
+        if ev.kind == "token":
+            tok_ms.append(ev.decode_ms)
+        elif ev.kind == "prefill":
+            ttft.append(ev.ttft_ms)
+        elif ev.kind == "complete":
+            lat.append(ev.latency_ms)
+            tokens += len(ev.tokens)
+            makespan = ev.t_ms
+    assert len(lat) == len(reqs), (batching, len(lat))
+    return {
+        "batching": batching,
+        "tokens": tokens,
+        "makespan_ms": makespan,
+        "throughput_tok_s": tokens / makespan * 1e3,
+        "token_ms_p50": float(np.percentile(tok_ms, 50)),
+        "token_ms_p99": float(np.percentile(tok_ms, 99)),
+        "ttft_ms_p50": float(np.percentile(ttft, 50)),
+        "ttft_ms_p99": float(np.percentile(ttft, 99)),
+        "latency_ms_p50": float(np.percentile(lat, 50)),
+        "latency_ms_p99": float(np.percentile(lat, 99)),
+        "prefill_traces": eng.prefill_traces,
+        "decode_traces": eng.decode_traces,
+    }
+
+
+def run_all(timing: str):
+    cfg = _bench_cfg()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = poisson_requests(N_REQUESTS, RATE_RPS, seed=7,
+                            vocab_size=cfg.vocab_size)
+    section(f"serve stream: {N_REQUESTS} requests @ {RATE_RPS}/s, "
+            f"slots={SLOTS}, timing={timing}")
+    results = {}
+    for batching in ("static", "continuous"):
+        r = _run_stream(params, cfg, batching, timing, reqs)
+        results[batching] = r
+        emit(f"serve_{batching}_token_step", r["token_ms_p50"] * 1e3,
+             f"tok_s={r['throughput_tok_s']:.1f};"
+             f"p99_ms={r['token_ms_p99']:.2f}")
+        emit(f"serve_{batching}_request_latency",
+             r["latency_ms_p50"] * 1e3,
+             f"p99_ms={r['latency_ms_p99']:.1f};"
+             f"ttft_p50_ms={r['ttft_ms_p50']:.1f}")
+    ratio = (results["continuous"]["throughput_tok_s"]
+             / results["static"]["throughput_tok_s"])
+    emit("serve_continuous_vs_static", ratio * 1e6,
+         f"throughput_ratio={ratio:.2f}x;floor={FLOOR}x")
+    return ratio >= FLOOR, ratio, results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report-only", action="store_true",
+                    help="never fail the exit code (noisy shared runners)")
+    ap.add_argument("--json", metavar="PATH", default="",
+                    help="write measurements + verdict as JSON (the "
+                    "BENCH_serve.json CI artifact)")
+    ap.add_argument("--timing", default="measured",
+                    choices=["measured", "model"],
+                    help="virtual-clock source (model = deterministic)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    ok, ratio, results = run_all(args.timing)
+    if args.json:
+        doc = {
+            "bench": "serve_stream",
+            "requests": N_REQUESTS,
+            "rate_rps": RATE_RPS,
+            "slots": SLOTS,
+            "max_seq": MAX_SEQ,
+            "timing": args.timing,
+            "floor": FLOOR,
+            "throughput_ratio": ratio,
+            "pass": ok,
+            "engines": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+    if not ok:
+        print(f"FAIL: continuous batching {ratio:.2f}x static throughput "
+              f"< {FLOOR}x floor", file=sys.stderr)
+        if not args.report_only:
+            sys.exit(1)
+    else:
+        print(f"OK: continuous batching {ratio:.2f}x static throughput "
+              f"(floor {FLOOR}x)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,70 +1,90 @@
-"""Serving driver: batched prefill + decode with a KV/SSM cache.
+"""Serving CLI: thin front-end over ``repro.serving``.
 
-CPU-scale demo of the decode path the dry-run lowers at production shapes:
+Replays a Poisson request stream through the resolved serve engine and
+prints per-request latency plus aggregate throughput — the CPU-scale
+twin of the decode path the dry-run lowers at production shapes:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \
-        --batch 4 --prompt-len 32 --gen 16
+    python -m repro.launch.serve --arch mamba2-370m \
+        --requests 16 --rate 50 --slots 4
+
+(``pip install -e .`` first; bare checkouts can prefix ``PYTHONPATH=src``.)
 """
 from __future__ import annotations
 
 import argparse
-import time
+import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.models import lm
+from repro.serving import ServeConfig, make_serve_engine, poisson_requests
 
 
 def greedy_generate(params, cfg, prompts, max_seq: int, gen: int):
-    """prompts: (B, P) int32.  Prefill token-by-token, then greedy decode."""
-    B, P = prompts.shape
-    cache = lm.init_cache(cfg, B, max_seq)
-    step = jax.jit(lambda p, c, n, t: lm.decode_step(p, c, n, t, cfg))
-    # prefill via the decode path (exercises cache writes at every pos)
-    logits = None
-    for i in range(P):
-        logits, cache = step(params, cache, jnp.int32(i), prompts[:, i:i + 1])
-    out = []
-    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-    for i in range(gen):
-        out.append(tok)
-        logits, cache = step(params, cache, jnp.int32(P + i), tok)
-        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-    return jnp.concatenate(out, axis=1)
+    """DEPRECATED shim over ``ServeEngine.generate`` — same contract as
+    the old token-by-token loop: prompts (B, P) int32 → (B, gen) ids."""
+    warnings.warn(
+        "launch.serve.greedy_generate is deprecated; use "
+        "repro.serving.make_serve_engine(...).generate(prompts, gen)",
+        DeprecationWarning, stacklevel=2)
+    B = prompts.shape[0]
+    eng = make_serve_engine(params, cfg, ServeConfig(
+        slots=B, max_seq=max_seq, max_new_tokens=gen))
+    return eng.generate(prompts, gen)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-370m",
                     choices=configs.ARCH_NAMES)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate (requests/sec)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batching", default="continuous",
+                    choices=["continuous", "static"])
+    ap.add_argument("--timing", default="measured",
+                    choices=["measured", "model"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = configs.get_reduced(args.arch)
-    if cfg.arch_type == "encdec":
-        raise SystemExit("decoder-only serving demo; pick another arch")
-    key = jax.random.PRNGKey(args.seed)
-    params = lm.init_params(key, cfg)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size, dtype=jnp.int32)
-    max_seq = args.prompt_len + args.gen + 1
-    t0 = time.time()
-    out = greedy_generate(params, cfg, prompts, max_seq, args.gen)
-    jax.block_until_ready(out)
-    wall = time.time() - t0
-    total_steps = args.batch * (args.prompt_len + args.gen)
-    print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen} -> {out.shape} in {wall:.2f}s "
-          f"({total_steps / wall:.1f} tok/s incl. compile)")
-    print("[serve] generated ids[0]:", np.asarray(out[0]))
-    assert not bool(jnp.isnan(out).any())
-    return out
+    # params and prompt stream draw from SPLIT keys (the old demo reused
+    # one key for both, correlating weights with the prompt ids)
+    key_params, key_prompts = jax.random.split(jax.random.PRNGKey(args.seed))
+    from repro.models import lm
+    params = lm.init_params(key_params, cfg)
+    prompt_seed = int(jax.random.randint(key_prompts, (), 0, 2**31 - 1))
+
+    eng = make_serve_engine(params, cfg, ServeConfig(
+        slots=args.slots, max_seq=args.max_seq, max_new_tokens=args.gen,
+        batching=args.batching, timing=args.timing))
+    reqs = poisson_requests(args.requests, args.rate, seed=prompt_seed,
+                            vocab_size=cfg.vocab_size)
+
+    lat, toks = {}, 0
+    for ev in eng.run(reqs):
+        if ev.kind == "prefill":
+            print(f"[serve] req {ev.request:3d} slot {ev.slot} "
+                  f"prefill {ev.prefill_ms:7.2f} ms  ttft {ev.ttft_ms:7.2f} ms")
+        elif ev.kind == "complete":
+            lat[ev.request] = ev.latency_ms
+            toks += len(ev.tokens)
+            print(f"[serve] req {ev.request:3d} done  t={ev.t_ms:8.1f} ms  "
+                  f"latency {ev.latency_ms:7.1f} ms  "
+                  f"tokens {np.asarray(ev.tokens)[:8]}...")
+            makespan = ev.t_ms
+    ls = np.asarray(sorted(lat.values()))
+    print(f"[serve] {cfg.name} {eng.batching}: {len(lat)} requests, "
+          f"{toks} tokens in {makespan:.1f} ms "
+          f"({toks / makespan * 1e3:.1f} tok/s) | latency "
+          f"p50 {np.percentile(ls, 50):.1f} ms "
+          f"p99 {np.percentile(ls, 99):.1f} ms")
+    assert len(lat) == args.requests
+    return lat
 
 
 if __name__ == "__main__":

@@ -82,7 +82,7 @@ def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
         return jax.eval_shape(
             lambda: encdec.init_encdec_cache(
                 cfg, B, shape.seq_len, enc_len(cfg, shape)))
-    return jax.eval_shape(lambda: lm.init_cache(cfg, B, shape.seq_len))
+    return jax.eval_shape(lambda: lm.init_cache(B, shape.seq_len, cfg))
 
 
 # ----------------------------------------------------------------------
@@ -129,8 +129,7 @@ def make_prefill_step(cfg: ModelConfig, scan_unroll: bool = False):
         hidden, caches, _ = lm.forward(
             params, batch["tokens"], cfg,
             frontend_embeds=batch.get("frontend_embeds"),
-            collect_cache=cfg.arch_type not in ("ssm",),
-            scan_unroll=scan_unroll)
+            collect_cache=True, scan_unroll=scan_unroll)
         return hidden[:, -1], caches
     return prefill
 

@@ -204,14 +204,18 @@ def init_kv_cache(batch: int, seq_len: int, num_kv_heads: int, head_dim: int,
 
 
 def decode_attention_block(params, x, cache, cache_len, cfg, *, window=None):
-    """x: (B, 1, d_model); cache k/v: (B, S, KH, D); cache_len: scalar int —
-    number of valid tokens already in the cache.  Returns (out, new_cache).
+    """x: (B, 1, d_model); cache k/v: (B, S, KH, D); cache_len: count of
+    valid tokens already in the cache — a scalar int, or a (B,) vector of
+    PER-ROW counts (continuous batching: each slot decodes at its own
+    position).  Returns (out, new_cache).
     """
     B, _, _ = x.shape
     H, KH, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = H // KH
     S = cache["k"].shape[1]
-    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+    pos = lens[:, None]
     q = dense(params["wq"], x).reshape(B, 1, H, D)
     k = dense(params["wk"], x).reshape(B, 1, KH, D)
     v = dense(params["wv"], x).reshape(B, 1, KH, D)
@@ -220,20 +224,23 @@ def decode_attention_block(params, x, cache, cache_len, cfg, *, window=None):
         k = _headwise_rms(k, params["k_norm"]["scale"])
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
-    ck = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, cache_len, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+    # per-row cache write at each row's own position (a one-hot select
+    # instead of dynamic_update_slice, which only takes batch-shared
+    # offsets); a row whose length already reached S writes nothing
+    k_pos = jnp.arange(S)
+    write = (k_pos[None, :] == lens[:, None])[:, :, None, None]
+    ck = jnp.where(write, k.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(write, v.astype(cache["v"].dtype), cache["v"])
 
     qg = q.reshape(B, KH, G, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, ck,
                    preferred_element_type=jnp.float32) / jnp.sqrt(D)
     if cfg.attn_softcap:
         s = softcap(s, cfg.attn_softcap)
-    k_pos = jnp.arange(S)
-    mask = k_pos[None, :] <= cache_len
+    mask = k_pos[None, :] <= lens[:, None]
     if window is not None:
-        mask = mask & (cache_len - k_pos[None, :] < jnp.asarray(window, jnp.int32))
+        mask = mask & (lens[:, None] - k_pos[None, :]
+                       < jnp.asarray(window, jnp.int32))
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cv.dtype), cv,

@@ -76,17 +76,30 @@ def init_block(key, cfg, dtype=jnp.float32):
 
 
 # ----------------------------------------------------------------------
-def block_forward(params, x, positions, cfg, window=None):
-    """Training/prefill path. Returns (x, kv_cache_or_None, aux_loss)."""
+def block_forward(params, x, positions, cfg, window=None,
+                  collect_cache: bool = False, cache_dtype=jnp.bfloat16):
+    """Training/prefill path. Returns (x, cache_or_None, aux_loss).
+
+    With ``collect_cache`` the middle return is this layer's decode cache
+    in ``init_block_cache`` layout (seq dim = prompt length for kv) —
+    exactly the state L sequential ``block_decode`` calls would have
+    produced.  Without it, the raw post-rope (k, v) tuple (training
+    introspection) for attention archs, else None.
+    """
     aux = jnp.zeros((), jnp.float32)
     kv = None
+    blk_cache = {}
     t = cfg.arch_type
     h = rms_norm(params["ln1"], x, cfg.norm_eps)
 
     if t == "hybrid":
         attn_out, kv = attention_block(params["attn"], h, positions, cfg,
                                        window=window)
-        ssm_out = mamba_mixer(params["mamba"], h, cfg)
+        ssm_out = mamba_mixer(params["mamba"], h, cfg,
+                              return_cache=collect_cache,
+                              cache_dtype=cache_dtype)
+        if collect_cache:
+            ssm_out, blk_cache["mamba"] = ssm_out
         attn_out = rms_norm(params["bn_attn"], attn_out, cfg.norm_eps) \
             * params["beta_attn"].astype(x.dtype)
         ssm_out = rms_norm(params["bn_ssm"], ssm_out, cfg.norm_eps) \
@@ -94,13 +107,25 @@ def block_forward(params, x, positions, cfg, window=None):
         mix = 0.5 * (attn_out + ssm_out)
         x = x + mix
     elif t == "ssm":
-        x = x + mamba_mixer(params["mamba"], h, cfg)
+        out = mamba_mixer(params["mamba"], h, cfg,
+                          return_cache=collect_cache,
+                          cache_dtype=cache_dtype)
+        if collect_cache:
+            out, blk_cache["mamba"] = out
+        x = x + out
     else:
         attn_out, kv = attention_block(params["attn"], h, positions, cfg,
                                        window=window)
         if cfg.post_norm:
             attn_out = rms_norm(params["pn1"], attn_out, cfg.norm_eps)
         x = x + attn_out
+
+    if collect_cache and kv is not None:
+        k, v = kv
+        blk_cache["kv"] = {"k": k.astype(cache_dtype),
+                           "v": v.astype(cache_dtype)}
+    if collect_cache:
+        kv = blk_cache
 
     if "moe" in params:
         h2 = rms_norm(params["ln2"], x, cfg.norm_eps)

@@ -7,8 +7,10 @@ full sequence (vocab up to 256k would otherwise dominate memory).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+import warnings
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +22,8 @@ from .blocks import (block_decode, block_forward, init_block,
 from .layers import embed, init_embedding, init_rms_norm, rms_norm, softcap
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step",
-           "chunked_cross_entropy"]
+           "chunked_cross_entropy", "DecodeCache", "prefill", "cache_insert",
+           "cache_evict"]
 
 
 def _dtype(cfg):
@@ -53,10 +56,13 @@ def _head_table(params):
 
 # ----------------------------------------------------------------------
 def forward(params, tokens, cfg, frontend_embeds=None, collect_cache=False,
-            remat=False, scan_unroll=False):
+            remat=False, scan_unroll=False, cache_dtype=jnp.bfloat16):
     """tokens: (B, S_text) int32; frontend_embeds: (B, P, d_model) or None.
 
-    Returns (hidden (B,S,d), stacked kv cache or None, aux_loss).
+    Returns (hidden (B,S,d), stacked per-layer decode caches or None,
+    aux_loss).  With ``collect_cache`` the middle value is the
+    ``init_block_cache``-layout pytree stacked over layers — the whole
+    prompt's decode state from ONE forward pass (the prefill path).
     """
     dt = _dtype(cfg)
     if cfg.embed_onehot:
@@ -96,7 +102,9 @@ def forward(params, tokens, cfg, frontend_embeds=None, collect_cache=False,
                 lambda p: jax.lax.optimization_barrier(p.astype(dt))
                 if p.ndim >= 2 else p, lp)
         x = constrain(x, "batch", "seq", "embed")
-        x, kv, a = block_forward(lp, x, positions, cfg, window=win)
+        x, kv, a = block_forward(lp, x, positions, cfg, window=win,
+                                 collect_cache=collect_cache,
+                                 cache_dtype=cache_dtype)
         return constrain(x, "batch", "seq", "embed"), kv, a
 
     if remat:
@@ -168,18 +176,114 @@ def loss_fn(params, batch, cfg, aux_weight: float = 0.01, remat: bool = False,
 # ----------------------------------------------------------------------
 # Serving
 # ----------------------------------------------------------------------
-def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
-    """Stacked-over-layers decode cache."""
+@dataclasses.dataclass
+class DecodeCache:
+    """Slot-major decode cache.
+
+    ``layers``: per-layer cache pytree stacked over layers — every leaf
+    has leading axis L (layers) and axis 1 = slot/batch.  ``lengths``:
+    (slots,) int32 valid-token counts; 0 marks a free slot.  Registered
+    as a pytree node so it flows through jit / donate / tree_map intact.
+    """
+    layers: Any
+    lengths: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    DecodeCache, data_fields=("layers", "lengths"), meta_fields=())
+
+
+def init_cache(batch, max_seq: Optional[int] = None, cfg=None,
+               dtype=jnp.bfloat16) -> "DecodeCache":
+    """Slot-major decode cache for ``batch`` slots of ``max_seq`` tokens.
+
+    Signature is cfg-LAST, matching ``forward``/``loss_fn``/``decode_step``.
+    The legacy ``init_cache(cfg, batch, max_seq)`` order is detected and
+    shimmed with a DeprecationWarning.
+    """
+    if hasattr(batch, "arch_type"):     # legacy (cfg, batch, max_seq) order
+        warnings.warn(
+            "init_cache(cfg, batch, max_seq) is deprecated; pass cfg last: "
+            "init_cache(batch, max_seq, cfg)",
+            DeprecationWarning, stacklevel=2)
+        batch, max_seq, cfg = max_seq, cfg, batch
+
     def one(_):
         return init_block_cache(batch, max_seq, cfg, dtype)
-    return jax.vmap(one)(jnp.arange(cfg.num_layers))
+
+    layers = jax.vmap(one)(jnp.arange(cfg.num_layers))
+    return DecodeCache(layers=layers,
+                       lengths=jnp.zeros((batch,), jnp.int32))
+
+
+def prefill(params, tokens, cfg, cache_dtype=jnp.bfloat16):
+    """Whole-prompt prefill as ONE forward pass (no per-token Python loop).
+
+    tokens: (B, P) int32.  Returns (last-position logits (B, 1, V) f32,
+    DecodeCache whose kv seq dim is P and whose lengths are all P) —
+    the exact state P sequential ``decode_step`` calls would build.
+    Insert the returned slice into a serving cache with ``cache_insert``.
+    """
+    dt = _dtype(cfg)
+    hidden, layers, _ = forward(params, tokens, cfg, collect_cache=True,
+                                cache_dtype=cache_dtype)
+    x = hidden[:, -1:]
+    logits = x @ _head_table(params).astype(dt).T
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    B, P = tokens.shape
+    return logits.astype(jnp.float32), DecodeCache(
+        layers=layers, lengths=jnp.full((B,), P, jnp.int32))
+
+
+def cache_insert(cache: "DecodeCache", slice_: "DecodeCache", slot,
+                 row=0) -> "DecodeCache":
+    """Copy row ``row`` of a prefill ``slice_`` into ``slot`` of a serving
+    cache.  Seq-dim leaves (kv) may be shorter in the slice — they land at
+    positions [0, P); everything past is masked out by ``lengths``.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    row = jnp.asarray(row, jnp.int32)
+
+    def upd(big, small):
+        part = jax.lax.dynamic_slice_in_dim(small, row, 1, axis=1)
+        return jax.lax.dynamic_update_slice(
+            big, part.astype(big.dtype),
+            (jnp.int32(0), slot) + (jnp.int32(0),) * (big.ndim - 2))
+
+    layers = jax.tree_util.tree_map(upd, cache.layers, slice_.layers)
+    lengths = cache.lengths.at[slot].set(
+        jax.lax.dynamic_index_in_dim(slice_.lengths, row, keepdims=False))
+    return DecodeCache(layers=layers, lengths=lengths)
+
+
+def cache_evict(cache: "DecodeCache", slot) -> "DecodeCache":
+    """Free ``slot``: zero its length so decode masks it out entirely.
+    The stale kv/ssm payload is left in place — the next ``cache_insert``
+    overwrites it and ``lengths`` gates all reads until then.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    return DecodeCache(layers=cache.layers,
+                       lengths=cache.lengths.at[slot].set(0))
 
 
 def decode_step(params, cache, cache_len, tokens, cfg, scan_unroll=False):
-    """tokens: (B, 1) int32; cache_len: scalar int32 count of valid tokens.
+    """tokens: (B, 1) int32; cache: DecodeCache (or a bare stacked layers
+    pytree, legacy).  cache_len: None → use ``cache.lengths`` (continuous
+    batching: every occupied slot decodes at its own position and its
+    length auto-increments in the returned cache); else a scalar or (B,)
+    count used as-is (legacy semantics: lengths pass through unchanged).
 
-    Returns (logits (B,1,V), new_cache).
+    Returns (logits (B,1,V) f32, new_cache of the same type as ``cache``).
     """
+    typed = isinstance(cache, DecodeCache)
+    layers = cache.layers if typed else cache
+    auto = cache_len is None
+    if auto:
+        if not typed:
+            raise ValueError("cache_len=None needs a DecodeCache "
+                             "(bare pytree caches carry no lengths)")
+        cache_len = cache.lengths
     dt = _dtype(cfg)
     x = embed(params["embed"], tokens).astype(dt)
     windows = layer_windows(cfg)
@@ -189,10 +293,16 @@ def decode_step(params, cache, cache_len, tokens, cfg, scan_unroll=False):
         x, new_c = block_decode(lp, x, lc, cache_len, cfg, window=win)
         return x, new_c
 
-    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, windows),
-                                unroll=cfg.num_layers if scan_unroll else 1)
+    x, new_layers = jax.lax.scan(body, x, (params["layers"], layers, windows),
+                                 unroll=cfg.num_layers if scan_unroll else 1)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = x @ _head_table(params).astype(dt).T
     if cfg.final_softcap:
         logits = softcap(logits, cfg.final_softcap)
-    return logits.astype(jnp.float32), new_cache
+    logits = logits.astype(jnp.float32)
+    if not typed:
+        return logits, new_layers
+    lengths = cache.lengths
+    if auto:
+        lengths = jnp.where(lengths > 0, lengths + 1, lengths)
+    return logits, DecodeCache(layers=new_layers, lengths=lengths)

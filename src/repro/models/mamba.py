@@ -83,11 +83,19 @@ def ssd_reference(x, dt, A, B, C, D):
     return (y + x.astype(jnp.float32) * D[:, None]).astype(x.dtype)
 
 
-def ssd_chunked(x, dt, A, B, C, D, chunk: int = 256):
+def ssd_chunked(x, dt, A, B, C, D, chunk: int = 256,
+                return_final_state: bool = False):
     """Chunked SSD (Mamba-2 Alg. with block decomposition).
 
     Same signature/semantics as ``ssd_reference``; O(L/Q) sequential steps,
     each an MXU-friendly quadratic form over a Q-token chunk.
+
+    ``return_final_state=True`` additionally returns the recurrence state
+    after the last REAL token as (b, H, P, N) float32 — the decode-cache
+    layout of ``init_mamba_cache`` — so a prefill can seed ``decode_step``
+    without replaying the sequence.  (Padded chunk tails have dt == 0:
+    decay exp(0) = 1 and a zero injection, so they leave the state
+    untouched and the final scan carry IS the length-L state.)
     """
     b, L, H, P = x.shape
     N = B.shape[-1]
@@ -135,7 +143,7 @@ def ssd_chunked(x, dt, A, B, C, D, chunk: int = 256):
         return new, prev                                     # emit state *before* chunk
 
     s0 = jnp.zeros((b, H, N, P), f32)
-    _, prev_states = jax.lax.scan(
+    final_state, prev_states = jax.lax.scan(
         chain, s0, (jnp.moveaxis(chunk_decay, 1, 0),
                     jnp.moveaxis(Sc, 1, 0)))
     prev_states = jnp.moveaxis(prev_states, 0, 1)            # (b,nc,H,N,P)
@@ -146,7 +154,11 @@ def ssd_chunked(x, dt, A, B, C, D, chunk: int = 256):
                          Cc, prev_states) * decay_from_start[..., None]
 
     y = (y_intra + y_inter).reshape(b, nc * Q, H, P)[:, :L]
-    return (y + x.reshape(b, nc * Q, H, P)[:, :L] * D[:, None]).astype(jnp.float32).astype(x.dtype)
+    y = (y + x.reshape(b, nc * Q, H, P)[:, :L] * D[:, None]) \
+        .astype(jnp.float32).astype(x.dtype)
+    if return_final_state:
+        return y, jnp.moveaxis(final_state, -1, -2)          # (b,H,P,N)
+    return y
 
 
 # ----------------------------------------------------------------------
@@ -160,8 +172,15 @@ def _causal_conv(x, w, b):
     return jax.nn.silu(out + b)
 
 
-def mamba_mixer(params, x, cfg, chunk: int = 0):
-    """x: (B, L, d_model) -> (B, L, d_model)."""
+def mamba_mixer(params, x, cfg, chunk: int = 0, return_cache: bool = False,
+                cache_dtype=jnp.bfloat16):
+    """x: (B, L, d_model) -> (B, L, d_model).
+
+    ``return_cache=True`` returns ``(y, cache)`` where ``cache`` matches
+    ``init_mamba_cache`` after L decode steps: the final SSD recurrence
+    state plus the last ``conv_kernel - 1`` raw conv inputs (left-padded
+    with the zeros the decode shift register starts from when L is short).
+    """
     chunk = chunk or cfg.ssd_chunk or 256
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     Bsz, L, _ = x.shape
@@ -177,14 +196,24 @@ def mamba_mixer(params, x, cfg, chunk: int = 0):
                          + params["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
     y = ssd_chunked(xs, dt, A, Bv, Cv, params["D"].astype(jnp.float32),
-                    chunk=chunk)
+                    chunk=chunk, return_final_state=return_cache)
+    if return_cache:
+        y, final_state = y
+        k = params["conv_w"].shape[0]
+        tail = conv_in[:, max(L - (k - 1), 0):, :].astype(cache_dtype)
+        if L < k - 1:
+            tail = jnp.pad(tail, ((0, 0), (k - 1 - L, 0), (0, 0)))
+        cache = {"ssm": final_state, "conv": tail}
     y = y.reshape(Bsz, L, H * P)
     # gated RMSNorm (mamba2's norm-before-gate)
     var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
     y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
          * params["norm_scale"].astype(jnp.float32)).astype(x.dtype)
     y = y * jax.nn.silu(z)
-    return dense(params["out_proj"], y)
+    out = dense(params["out_proj"], y)
+    if return_cache:
+        return out, cache
+    return out
 
 
 # ----------------------------------------------------------------------

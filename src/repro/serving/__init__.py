@@ -1,0 +1,18 @@
+"""Serving subsystem: one-call prefill, slot-based continuous batching.
+
+Mirrors the training API shape: ``resolve_serve_engine`` is the single
+config-resolution point (the serving twin of ``core.engine.resolve_engine``)
+and engines stream ``ServeEvent``s the way trainers stream ``RoundEvent``s.
+"""
+from .engine import (ContinuousServeEngine, MeasuredTimer, ModelTimer,
+                     ServeConfig, ServeEngine, ServeEvent, ServePlan,
+                     StaticServeEngine, make_serve_engine,
+                     resolve_serve_engine)
+from .scheduler import Request, SlotAllocator, poisson_requests
+
+__all__ = [
+    "ServeConfig", "ServePlan", "ServeEvent", "ServeEngine",
+    "ContinuousServeEngine", "StaticServeEngine", "MeasuredTimer",
+    "ModelTimer", "resolve_serve_engine", "make_serve_engine",
+    "Request", "SlotAllocator", "poisson_requests",
+]

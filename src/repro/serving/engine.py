@@ -1,0 +1,436 @@
+"""Serve engines: one-call prefill + slot-based continuous batching.
+
+The serving mirror of ``core/engine.py``: interchangeable execution
+substrates behind ONE config-resolution point,
+
+| engine                   | batching     | substrate                        |
+|--------------------------|--------------|----------------------------------|
+| ``ContinuousServeEngine``| ``continuous``| requests join/leave the running  |
+|                          |              | decode batch via cache slots     |
+| ``StaticServeEngine``    | ``static``   | fixed batches drain at the max   |
+|                          |              | of the group before re-forming   |
+
+``resolve_serve_engine(model_cfg, ServeConfig) -> ServePlan`` is the
+SINGLE point that inspects the ``batching`` / ``timing`` dispatch fields
+(grep-verifiable, like ``resolve_engine``): engines receive a fully
+resolved plan — capacity, dtype, and a timer object — and never read the
+ServeConfig.
+
+Engines stream: ``run(requests)`` yields one ``ServeEvent`` per
+lifecycle step (arrival, prefill, per-token decode, completion) the way
+``BPTTrainer.run`` yields ``RoundEvent``s, on a virtual clock advanced
+by *measured* call durations (``timing="measured"``) or a deterministic
+cost model (``timing="model"`` — reproducible scheduler tests, the PR 7
+``duration_source`` idiom).  Prefill is ONE jitted forward over the
+whole prompt (``lm.prefill``), not P sequential decode steps; per-step
+decode timing is surfaced on every event so the tiled-dense work from
+arXiv:1802.04924 has a measurement hook from day one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+from .scheduler import Request, SlotAllocator
+
+__all__ = [
+    "ServeConfig", "ServePlan", "ServeEvent", "MeasuredTimer", "ModelTimer",
+    "ServeEngine", "ContinuousServeEngine", "StaticServeEngine",
+    "resolve_serve_engine", "make_serve_engine",
+]
+
+
+# ----------------------------------------------------------------------
+# config & streaming surface
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving knobs.  ``batching`` and ``timing`` are DISPATCH fields:
+    only ``resolve_serve_engine`` may inspect them (grep-enforced)."""
+    slots: int = 8                 # fixed decode-batch capacity
+    max_seq: int = 128             # per-slot cache length (prompt + gen)
+    max_new_tokens: int = 16       # default generation budget per request
+    batching: str = "continuous"   # continuous | static
+    timing: str = "measured"       # measured | model (virtual cost clock)
+    cache_dtype: str = "bfloat16"  # bfloat16 | float32 kv payload
+    prefill_cost_ms: float = 0.05  # model timing: ms per prompt token
+    decode_cost_ms: float = 1.0    # model timing: ms per decode step
+    slot_cost_ms: float = 0.0      # model timing: ms per insert/evict
+
+    def __post_init__(self):
+        if self.batching not in ("continuous", "static"):
+            raise ValueError(f"batching={self.batching!r}: "
+                             "'continuous' or 'static'")
+        if self.timing not in ("measured", "model"):
+            raise ValueError(f"timing={self.timing!r}: 'measured' or 'model'")
+        if self.cache_dtype not in ("bfloat16", "float32"):
+            raise ValueError(f"cache_dtype={self.cache_dtype!r}: "
+                             "'bfloat16' or 'float32'")
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+
+
+@dataclasses.dataclass
+class ServeEvent:
+    """One serving lifecycle step, as seen by a streaming caller.
+
+    ``kind``: ``arrival`` (request entered the stream), ``prefill``
+    (whole prompt processed in one call; ``token`` is the first generated
+    id, ``ttft_ms`` the time-to-first-token), ``token`` (one decode step;
+    ``decode_ms`` is that step's duration), ``complete`` (``tokens`` is
+    the full generated sequence, ``latency_ms`` arrival → completion).
+    ``t_ms`` is the virtual clock at emission.
+    """
+    kind: str
+    request: int
+    t_ms: float
+    slot: int = -1
+    token: int = -1
+    prefill_ms: float = 0.0
+    decode_ms: float = 0.0
+    ttft_ms: float = 0.0
+    latency_ms: float = 0.0
+    tokens: Optional[List[int]] = None
+
+
+# ----------------------------------------------------------------------
+# timers: the virtual clock's duration source
+# ----------------------------------------------------------------------
+class MeasuredTimer:
+    """Advance the clock by measured wall time (block_until_ready)."""
+    source = "measured"
+
+    def call(self, kind: str, units: float, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out, (time.perf_counter() - t0) * 1e3
+
+
+class ModelTimer:
+    """Advance the clock by a deterministic cost model — reproducible
+    scheduler behaviour regardless of host speed (the PR 7
+    ``duration_source='model'`` simulation idiom on the serving side)."""
+    source = "model"
+
+    def __init__(self, prefill_cost_ms: float, decode_cost_ms: float,
+                 slot_cost_ms: float = 0.0):
+        self.prefill_cost_ms = prefill_cost_ms
+        self.decode_cost_ms = decode_cost_ms
+        self.slot_cost_ms = slot_cost_ms
+
+    def call(self, kind: str, units: float, fn, *args):
+        out = fn(*args)
+        ms = {"prefill": units * self.prefill_cost_ms,
+              "decode": self.decode_cost_ms,
+              "slot": self.slot_cost_ms}[kind]
+        return out, ms
+
+
+# ----------------------------------------------------------------------
+# the single config-resolution point
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class ServePlan:
+    """Resolved serving plan.  Fully self-contained: engines read ONLY
+    this (capacity, dtype, default budget, timer object) — never the
+    ServeConfig, so the dispatch fields stay grep-private to
+    ``resolve_serve_engine``."""
+    engine_cls: type
+    batching: str              # substrate that will execute
+    requested: str             # what the config asked for
+    timer: Any                 # MeasuredTimer | ModelTimer
+    slots: int
+    max_seq: int
+    max_new_tokens: int
+    cache_dtype: Any           # resolved jnp dtype
+
+
+def resolve_serve_engine(cfg, serve: Optional[ServeConfig] = None
+                         ) -> ServePlan:
+    """Map (ModelConfig, ServeConfig) to a serving plan.
+
+    Owns every dispatch rule and every actionable error: encoder-decoder
+    models are rejected here (their per-request cross-attention memory
+    does not fit the slot-major self-attention cache).
+    """
+    serve = serve if serve is not None else ServeConfig()
+    if cfg.arch_type == "encdec":
+        raise ValueError(
+            "arch_type='encdec' cannot be served by the slot-major decode "
+            "cache: each request carries its own cross-attention memory. "
+            "Serve a decoder-only arch, or use launch/dryrun for encdec "
+            "decode analysis.")
+    if serve.max_new_tokens < 1:
+        raise ValueError("max_new_tokens must be >= 1")
+    if serve.max_seq < 2:
+        raise ValueError("max_seq must be >= 2 (prompt + generation)")
+    engine_cls = (ContinuousServeEngine if serve.batching == "continuous"
+                  else StaticServeEngine)
+    timer = (MeasuredTimer() if serve.timing == "measured"
+             else ModelTimer(serve.prefill_cost_ms, serve.decode_cost_ms,
+                             serve.slot_cost_ms))
+    return ServePlan(
+        engine_cls=engine_cls,
+        batching=serve.batching,
+        requested=serve.batching,
+        timer=timer,
+        slots=serve.slots,
+        max_seq=serve.max_seq,
+        max_new_tokens=serve.max_new_tokens,
+        cache_dtype=(jnp.bfloat16 if serve.cache_dtype == "bfloat16"
+                     else jnp.float32),
+    )
+
+
+def make_serve_engine(params, cfg, serve: Optional[ServeConfig] = None
+                      ) -> "ServeEngine":
+    """Convenience: resolve + instantiate in one call."""
+    plan = resolve_serve_engine(cfg, serve)
+    return plan.engine_cls(params, cfg, plan)
+
+
+# ----------------------------------------------------------------------
+# engines
+# ----------------------------------------------------------------------
+class ServeEngine:
+    """Base engine: owns the slot-major ``DecodeCache`` and the four
+    jitted primitives (prefill / insert / evict / decode).
+
+    ``prefill_traces`` / ``decode_traces`` count actual retraces (the
+    counters increment inside the jitted bodies, so they only tick at
+    trace time) — the test_serve proof that prefill is ONE jitted call
+    per prompt shape, not P sequential steps.
+    """
+
+    batching = "base"
+
+    def __init__(self, params, cfg, plan: ServePlan):
+        self.params = params
+        self.cfg = cfg
+        self.plan = plan
+        self.cache = lm.init_cache(plan.slots, plan.max_seq, cfg,
+                                   dtype=plan.cache_dtype)
+        self.prefill_traces = 0
+        self.decode_traces = 0
+        # donation halves decode cache traffic where the backend supports
+        # it; CPU does not and would warn on every call
+        donate = (1,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+        def _prefill(p, toks):
+            self.prefill_traces += 1
+            return lm.prefill(p, toks, cfg, cache_dtype=plan.cache_dtype)
+
+        def _decode(p, cache, toks):
+            self.decode_traces += 1
+            return lm.decode_step(p, cache, None, toks, cfg)
+
+        self._prefill_jit = jax.jit(_prefill)
+        self._decode_jit = jax.jit(_decode, donate_argnums=donate)
+        self._insert_jit = jax.jit(lm.cache_insert)
+        self._evict_jit = jax.jit(lm.cache_evict)
+
+    # -- jitted primitives behind the plan's timer ---------------------
+    def prefill(self, tokens):
+        """Whole-prompt forward in ONE jitted call.
+        tokens: (B, P) int32 → (last-logits (B,1,V), cache slice, ms)."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        (logits, sl), ms = self.plan.timer.call(
+            "prefill", tokens.shape[1], self._prefill_jit,
+            self.params, tokens)
+        return logits, sl, ms
+
+    def insert(self, slice_, slot: int, row: int = 0) -> float:
+        """Copy ``row`` of a prefill slice into ``slot``; returns ms."""
+        self.cache, ms = self.plan.timer.call(
+            "slot", 1, self._insert_jit, self.cache, slice_,
+            jnp.int32(slot), jnp.int32(row))
+        return ms
+
+    def evict(self, slot: int) -> float:
+        """Free ``slot`` (length → 0; payload masked out); returns ms."""
+        self.cache, ms = self.plan.timer.call(
+            "slot", 1, self._evict_jit, self.cache, jnp.int32(slot))
+        return ms
+
+    def decode(self, tokens):
+        """One decode step for the WHOLE resident batch: every occupied
+        slot advances at its own length.  tokens: (slots,) int32 (free
+        slots' entries are ignored).  Returns (logits (slots,1,V), ms)."""
+        tokens = jnp.asarray(tokens, jnp.int32).reshape(self.plan.slots, 1)
+        (logits, self.cache), ms = self.plan.timer.call(
+            "decode", 1, self._decode_jit, self.params, self.cache, tokens)
+        return logits, ms
+
+    # -- batch helper (the legacy greedy_generate contract) ------------
+    def generate(self, prompts, gen: int):
+        """Greedy-decode ``gen`` tokens for a (B, P) prompt batch.
+        Returns (B, gen) int32.  B must fit the slot capacity."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B, P = prompts.shape
+        if B > self.plan.slots:
+            raise ValueError(f"batch {B} exceeds slot capacity "
+                             f"{self.plan.slots}")
+        logits, sl, _ = self.prefill(prompts)
+        for b in range(B):
+            self.insert(sl, slot=b, row=b)
+        tok = np.zeros((self.plan.slots,), np.int32)
+        tok[:B] = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        out = [tok[:B].copy()]
+        for _ in range(gen - 1):
+            logits, _ = self.decode(tok)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            tok[:B] = nxt[:B]
+            out.append(tok[:B].copy())
+        for b in range(B):
+            self.evict(b)
+        return jnp.asarray(np.stack(out, axis=1), jnp.int32)
+
+    # -- request-stream surface ----------------------------------------
+    def run(self, requests) -> Iterator[ServeEvent]:
+        raise NotImplementedError
+
+    def _budget(self, req: Request) -> int:
+        g = req.max_new_tokens or self.plan.max_new_tokens
+        p = len(req.tokens)
+        if p + g > self.plan.max_seq:
+            raise ValueError(
+                f"request {req.id}: prompt {p} + max_new_tokens {g} "
+                f"exceeds max_seq {self.plan.max_seq}")
+        return g
+
+    def _admit(self, req: Request, slot: int, clock: float):
+        """Prefill + insert one request into ``slot``.  Returns
+        (new_clock, events, state) where state is None when the request
+        completed at prefill (budget of exactly one token)."""
+        budget = self._budget(req)
+        logits, sl, pre_ms = self.prefill(np.asarray(req.tokens)[None])
+        clock += pre_ms
+        clock += self.insert(sl, slot)
+        first = int(jnp.argmax(logits[0, -1]))
+        ttft = clock - req.arrival_ms
+        events = [ServeEvent(kind="prefill", request=req.id, t_ms=clock,
+                             slot=slot, token=first, prefill_ms=pre_ms,
+                             ttft_ms=ttft)]
+        state = {"req": req, "toks": [first], "budget": budget,
+                 "ttft": ttft}
+        if budget == 1:
+            clock += self.evict(slot)
+            events.append(ServeEvent(
+                kind="complete", request=req.id, t_ms=clock, slot=slot,
+                ttft_ms=ttft, latency_ms=clock - req.arrival_ms,
+                tokens=state["toks"]))
+            state = None
+        return clock, events, state
+
+
+class ContinuousServeEngine(ServeEngine):
+    """Continuous batching: between decode steps, every arrived request
+    takes a free slot immediately; completed requests evict their slot
+    mid-flight, so the decode batch never drains to re-form."""
+
+    batching = "continuous"
+
+    def run(self, requests) -> Iterator[ServeEvent]:
+        stream = iter(requests)
+        nxt = next(stream, None)
+        free = SlotAllocator(self.plan.slots)
+        resident = {}                      # slot -> admission state
+        last_tok = np.zeros((self.plan.slots,), np.int32)
+        clock = 0.0
+        while nxt is not None or resident:
+            while (nxt is not None and free.available
+                   and nxt.arrival_ms <= clock):
+                slot = free.alloc()
+                yield ServeEvent(kind="arrival", request=nxt.id,
+                                 t_ms=nxt.arrival_ms, slot=slot)
+                clock, events, state = self._admit(nxt, slot, clock)
+                yield from events
+                if state is None:
+                    free.free(slot)
+                else:
+                    resident[slot] = state
+                    last_tok[slot] = state["toks"][-1]
+                nxt = next(stream, None)
+            if not resident:
+                if nxt is None:
+                    break
+                clock = max(clock, nxt.arrival_ms)   # idle: jump to arrival
+                continue
+            logits, dec_ms = self.decode(last_tok)
+            clock += dec_ms
+            nxt_tok = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for slot in sorted(resident):
+                st = resident[slot]
+                tok = int(nxt_tok[slot])
+                st["toks"].append(tok)
+                last_tok[slot] = tok
+                yield ServeEvent(kind="token", request=st["req"].id,
+                                 t_ms=clock, slot=slot, token=tok,
+                                 decode_ms=dec_ms)
+                if len(st["toks"]) >= st["budget"]:
+                    clock += self.evict(slot)
+                    yield ServeEvent(
+                        kind="complete", request=st["req"].id, t_ms=clock,
+                        slot=slot, ttft_ms=st["ttft"],
+                        latency_ms=clock - st["req"].arrival_ms,
+                        tokens=st["toks"])
+                    del resident[slot]
+                    free.free(slot)
+
+
+class StaticServeEngine(ServeEngine):
+    """Static batching baseline: requests form fixed groups of ``slots``;
+    a group only starts once its last member has arrived, and the whole
+    group decodes until EVERY member is done (max-of-batch drain) before
+    the next group forms — the cost continuous batching removes."""
+
+    batching = "static"
+
+    def run(self, requests) -> Iterator[ServeEvent]:
+        reqs = list(requests)
+        clock = 0.0
+        for start in range(0, len(reqs), self.plan.slots):
+            group = reqs[start:start + self.plan.slots]
+            for slot, req in enumerate(group):
+                yield ServeEvent(kind="arrival", request=req.id,
+                                 t_ms=req.arrival_ms, slot=slot)
+            clock = max(clock, max(r.arrival_ms for r in group))
+            resident = {}
+            last_tok = np.zeros((self.plan.slots,), np.int32)
+            for slot, req in enumerate(group):
+                clock, events, state = self._admit(req, slot, clock)
+                yield from events
+                if state is not None:
+                    resident[slot] = state
+                    last_tok[slot] = state["toks"][-1]
+            while resident:
+                logits, dec_ms = self.decode(last_tok)
+                clock += dec_ms
+                nxt_tok = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                for slot in sorted(resident):
+                    st = resident[slot]
+                    tok = int(nxt_tok[slot])
+                    st["toks"].append(tok)
+                    last_tok[slot] = tok
+                    yield ServeEvent(kind="token", request=st["req"].id,
+                                     t_ms=clock, slot=slot, token=tok,
+                                     decode_ms=dec_ms)
+                    if len(st["toks"]) >= st["budget"]:
+                        yield ServeEvent(
+                            kind="complete", request=st["req"].id,
+                            t_ms=clock, slot=slot, ttft_ms=st["ttft"],
+                            latency_ms=clock - st["req"].arrival_ms,
+                            tokens=st["toks"])
+                        del resident[slot]
+            for slot, _ in enumerate(group):
+                clock += self.evict(slot)

@@ -111,7 +111,7 @@ class TestArchSmoke:
                 params, cache, jnp.int32(0), tok, cfg)
         else:
             params = lm.init_params(key, cfg)
-            cache = lm.init_cache(cfg, B, S)
+            cache = lm.init_cache(B, S, cfg)
             logits, cache2 = lm.decode_step(params, cache, jnp.int32(0),
                                             tok, cfg)
         assert logits.shape == (B, 1, cfg.vocab_size)

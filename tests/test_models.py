@@ -176,7 +176,7 @@ class TestDecodeConsistency:
         table = params.get("lm_head", params["embed"])["table"]
         want = hidden[:, -1] @ table.astype(hidden.dtype).T
 
-        cache = lm.init_cache(cfg, 2, S + 1)
+        cache = lm.init_cache(2, S + 1, cfg)
         logits = None
         for i in range(S):
             logits, cache = lm.decode_step(params, cache, jnp.int32(i),

@@ -1,0 +1,367 @@
+"""Serving-subsystem suite: one-call prefill equivalence, slot-cache
+invariants, the serve-side single-decision-point guarantee, the
+greedy_generate deprecation shim, engine streaming semantics under the
+deterministic cost clock, and a smoke test of the rebuilt CLI.
+
+Mirrors test_engine.py's structure: grep-enforced config hygiene plus
+behavioural contracts over the streaming event API.
+"""
+import os
+import re
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serving.engine as serve_engine_module
+from repro.core.types import ModelConfig
+from repro.models import lm
+from repro.serving import (ContinuousServeEngine, Request, ServeConfig,
+                           SlotAllocator, StaticServeEngine,
+                           make_serve_engine, poisson_requests,
+                           resolve_serve_engine)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _tiny(arch_type, **kw):
+    base = dict(name="t", arch_type=arch_type, num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=128)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+ARCH_CFGS = {
+    "dense": _tiny("dense"),
+    "windowed": _tiny("dense", sliding_window=8, window_pattern=2),
+    "moe": _tiny("moe", num_experts=4, top_k=2, expert_d_ff=64,
+                 moe_capacity_factor=8.0),
+    "ssm": _tiny("ssm", num_heads=0, num_kv_heads=0, head_dim=0, d_ff=0,
+                 ssm_heads=4, ssm_head_dim=16, ssm_state=8),
+    "hybrid": _tiny("hybrid", ssm_heads=4, ssm_head_dim=16, ssm_state=8),
+}
+
+# ulp-scale tolerances: prefill computes the same values as the decode
+# loop but through differently-fused matmuls, so bf16 cache payloads may
+# differ by a couple of ulps and the f32 SSM state by the chunked-vs-
+# sequential recurrence reordering
+CACHE_ATOL = {"k": 0.08, "v": 0.08, "conv": 0.08, "ssm": 5e-3}
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = ARCH_CFGS["dense"]
+    return cfg, lm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+# ----------------------------------------------------------------------
+# one-call prefill == token-by-token prefill
+# ----------------------------------------------------------------------
+class TestPrefillEquivalence:
+    @pytest.mark.parametrize("arch", list(ARCH_CFGS), ids=list(ARCH_CFGS))
+    def test_prefill_matches_decode_loop(self, arch):
+        """lm.prefill (ONE forward with collect_cache) must reproduce the
+        cache and last logits of P sequential decode_step calls — for
+        every arch family, leaf by leaf."""
+        cfg = ARCH_CFGS[arch]
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        P = 12
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, P), 0,
+                                  cfg.vocab_size)
+        logits1, sl = lm.prefill(params, toks, cfg)
+        assert logits1.shape == (2, 1, cfg.vocab_size)
+        assert list(np.asarray(sl.lengths)) == [P, P]
+
+        cache = lm.init_cache(2, P + 4, cfg)
+        logits2 = None
+        for i in range(P):
+            logits2, cache = lm.decode_step(params, cache, jnp.int32(i),
+                                            toks[:, i:i + 1], cfg)
+        np.testing.assert_allclose(np.asarray(logits1),
+                                   np.asarray(logits2), atol=0.05)
+
+        def check(path, a, b):
+            leaf = path[-1].key
+            a = jnp.asarray(a, jnp.float32)
+            b = jnp.asarray(b, jnp.float32)
+            if a.shape != b.shape:          # kv slice is seq-trimmed to P
+                b = b[:, :, :a.shape[2]]
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=CACHE_ATOL[leaf],
+                                       err_msg=f"cache leaf {leaf}")
+        jax.tree_util.tree_map_with_path(check, sl.layers, cache.layers)
+
+    def test_prefill_is_one_jitted_call(self, dense_setup):
+        """Trace-count proof: the engine's prefill traces ONCE per prompt
+        shape, no matter how many prompts of that shape it serves."""
+        cfg, params = dense_setup
+        eng = make_serve_engine(params, cfg, ServeConfig(slots=2, max_seq=64))
+        for seed in range(3):
+            toks = jax.random.randint(jax.random.PRNGKey(seed), (1, 10), 0,
+                                      cfg.vocab_size)
+            eng.prefill(toks)
+        assert eng.prefill_traces == 1
+        eng.prefill(jnp.zeros((1, 7), jnp.int32))    # new shape: one more
+        assert eng.prefill_traces == 2
+
+    def test_decode_traces_once(self, dense_setup):
+        cfg, params = dense_setup
+        eng = make_serve_engine(params, cfg, ServeConfig(slots=2, max_seq=32))
+        _, sl, _ = eng.prefill(jnp.zeros((1, 4), jnp.int32))
+        eng.insert(sl, 0)
+        for _ in range(4):
+            eng.decode(np.zeros((2,), np.int32))
+        assert eng.decode_traces == 1
+
+
+# ----------------------------------------------------------------------
+# slot invariants
+# ----------------------------------------------------------------------
+class TestSlotInvariants:
+    def test_insert_evict_lengths(self, dense_setup):
+        cfg, params = dense_setup
+        cache = lm.init_cache(4, 32, cfg)
+        _, sl = lm.prefill(params, jnp.zeros((1, 5), jnp.int32), cfg)
+        cache = lm.cache_insert(cache, sl, 2)
+        assert list(np.asarray(cache.lengths)) == [0, 0, 5, 0]
+        cache = lm.cache_evict(cache, 2)
+        assert list(np.asarray(cache.lengths)) == [0, 0, 0, 0]
+
+    def test_auto_increment_only_occupied(self, dense_setup):
+        cfg, params = dense_setup
+        cache = lm.init_cache(4, 32, cfg)
+        _, sl = lm.prefill(params, jnp.zeros((1, 5), jnp.int32), cfg)
+        cache = lm.cache_insert(cache, sl, 1)
+        _, cache = lm.decode_step(params, cache, None,
+                                  jnp.zeros((4, 1), jnp.int32), cfg)
+        assert list(np.asarray(cache.lengths)) == [0, 6, 0, 0]
+
+    def test_evicted_slot_reusable_without_interference(self, dense_setup):
+        """Evict slot s, insert a NEW request into s: a resident slot's
+        next-token logits must be BIT-IDENTICAL to a run where s stayed
+        empty — the lengths mask makes stale payload unreachable."""
+        cfg, params = dense_setup
+        t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 7), 0,
+                                cfg.vocab_size)
+        t2 = jax.random.randint(jax.random.PRNGKey(2), (1, 11), 0,
+                                cfg.vocab_size)
+        _, s1 = lm.prefill(params, t1, cfg)
+        _, s2 = lm.prefill(params, t2, cfg)
+        base = lm.init_cache(4, 32, cfg)
+        base = lm.cache_insert(base, s1, 0)
+        occupied = lm.cache_insert(base, s2, 2)      # resident neighbour
+        occupied = lm.cache_evict(occupied, 2)       # ... then evicted
+        reused = lm.cache_insert(occupied, s2, 2)    # slot 2 reused
+        toks = jnp.zeros((4, 1), jnp.int32)
+        la, _ = lm.decode_step(params, occupied, None, toks, cfg)
+        lb, _ = lm.decode_step(params, reused, None, toks, cfg)
+        assert jnp.array_equal(la[0], lb[0]), \
+            "slot-2 payload leaked into slot 0's decode"
+
+    def test_slot_decode_matches_standalone(self, dense_setup):
+        """A slot decoding inside a shared cache must match the same
+        request served alone in a batch-1 cache."""
+        cfg, params = dense_setup
+        t = jax.random.randint(jax.random.PRNGKey(3), (1, 9), 0,
+                               cfg.vocab_size)
+        lg, sl = lm.prefill(params, t, cfg)
+        nxt = jnp.argmax(lg[:, 0], -1).astype(jnp.int32)
+        big = lm.cache_insert(lm.init_cache(4, 32, cfg), sl, 3)
+        toks = jnp.zeros((4, 1), jnp.int32).at[3, 0].set(nxt[0])
+        l_shared, _ = lm.decode_step(params, big, None, toks, cfg)
+        solo = lm.cache_insert(lm.init_cache(1, 32, cfg), sl, 0)
+        l_solo, _ = lm.decode_step(params, solo, None, nxt[:, None], cfg)
+        np.testing.assert_allclose(np.asarray(l_shared[3]),
+                                   np.asarray(l_solo[0]), atol=0.05)
+
+    def test_allocator(self):
+        al = SlotAllocator(2)
+        assert al.alloc() == 0 and al.alloc() == 1
+        with pytest.raises(RuntimeError, match="no free"):
+            al.alloc()
+        al.free(0)
+        assert al.alloc() == 0                      # lowest slot reused
+        with pytest.raises(ValueError):
+            al.free(7)
+
+
+# ----------------------------------------------------------------------
+# config hygiene (grep-enforced, like test_engine.py)
+# ----------------------------------------------------------------------
+class TestSingleDecisionPoint:
+    def test_only_resolve_serve_engine_reads_dispatch_fields(self):
+        """No module under src/repro other than serving/engine.py reads
+        the ServeConfig ``batching`` / ``timing`` dispatch fields off a
+        config object."""
+        root = Path(serve_engine_module.__file__).parents[1]   # src/repro
+        flag = re.compile(
+            r"\b(?:sc|serve|serve_cfg|serve_config|cfg|config|"
+            r"self\.serve|self\.sc)\.(?:batching|timing)\b")
+        offenders = [
+            f"{path.relative_to(root)}:{lineno}"
+            for path in sorted(root.rglob("*.py"))
+            if not (path.name == "engine.py" and path.parent.name == "serving")
+            for lineno, line in enumerate(path.read_text().splitlines(), 1)
+            if flag.search(line)
+        ]
+        assert not offenders, (
+            "ServeConfig dispatch fields must only be inspected by "
+            f"resolve_serve_engine, found: {offenders}")
+
+    def test_no_caller_uses_legacy_init_cache_order(self):
+        """The cfg-first ``init_cache(cfg, batch, max_seq)`` order is
+        shimmed but must not be used anywhere in the tree."""
+        legacy = re.compile(
+            r"\binit_cache\(\s*(?:cfg|config|model_cfg|self\.cfg)\b")
+        offenders = [
+            f"{path.relative_to(REPO)}:{lineno}"
+            for scan in (REPO / "src", REPO / "tests", REPO / "benchmarks")
+            for path in sorted(scan.rglob("*.py"))
+            if path.name != "lm.py" and path != Path(__file__).resolve()
+            for lineno, line in enumerate(path.read_text().splitlines(), 1)
+            if legacy.search(line)
+        ]
+        assert not offenders, \
+            f"legacy init_cache(cfg, ...) call order found: {offenders}"
+
+    def test_legacy_init_cache_order_warns_and_works(self, dense_setup):
+        cfg, _ = dense_setup
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            old = getattr(lm, "init_cache")(cfg, 2, 16)
+        assert any(issubclass(w.category, DeprecationWarning)
+                   for w in caught)
+        new = lm.init_cache(2, 16, cfg)
+        assert jax.tree_util.tree_structure(old) == \
+            jax.tree_util.tree_structure(new)
+
+
+class TestResolve:
+    def test_encdec_rejected(self):
+        cfg = _tiny("encdec", num_encoder_layers=1, num_frontend_tokens=4)
+        with pytest.raises(ValueError, match="encdec"):
+            resolve_serve_engine(cfg, ServeConfig())
+
+    def test_bad_config_values(self):
+        with pytest.raises(ValueError, match="batching"):
+            ServeConfig(batching="adaptive")
+        with pytest.raises(ValueError, match="timing"):
+            ServeConfig(timing="wall")
+        with pytest.raises(ValueError, match="cache_dtype"):
+            ServeConfig(cache_dtype="int8")
+        with pytest.raises(ValueError, match="slots"):
+            ServeConfig(slots=0)
+
+    def test_dispatch(self):
+        cfg = ARCH_CFGS["dense"]
+        plan = resolve_serve_engine(cfg, ServeConfig(batching="continuous",
+                                                     timing="model"))
+        assert plan.engine_cls is ContinuousServeEngine
+        assert plan.timer.source == "model"
+        plan = resolve_serve_engine(cfg, ServeConfig(batching="static"))
+        assert plan.engine_cls is StaticServeEngine
+        assert plan.timer.source == "measured"
+
+    def test_request_over_budget_rejected(self, dense_setup):
+        cfg, params = dense_setup
+        eng = make_serve_engine(params, cfg, ServeConfig(
+            slots=2, max_seq=16, max_new_tokens=4, timing="model"))
+        bad = [Request(id=0, arrival_ms=0.0,
+                       tokens=np.zeros(14, np.int32))]   # 14 + 4 > 16
+        with pytest.raises(ValueError, match="max_seq"):
+            list(eng.run(bad))
+
+
+# ----------------------------------------------------------------------
+# deprecated greedy_generate shim
+# ----------------------------------------------------------------------
+class TestGreedyGenerateShim:
+    def test_shim_warns_and_matches_engine(self, dense_setup):
+        from repro.launch.serve import greedy_generate
+        cfg, params = dense_setup
+        prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 6), 0,
+                                     cfg.vocab_size, dtype=jnp.int32)
+        with pytest.warns(DeprecationWarning):
+            shim_out = greedy_generate(params, cfg, prompts, max_seq=24,
+                                       gen=5)
+        eng = make_serve_engine(params, cfg, ServeConfig(slots=2,
+                                                         max_seq=24))
+        engine_out = eng.generate(prompts, 5)
+        assert shim_out.shape == (2, 5)
+        assert jnp.array_equal(shim_out, engine_out)
+
+
+# ----------------------------------------------------------------------
+# streaming semantics under the deterministic cost clock
+# ----------------------------------------------------------------------
+class TestStreaming:
+    def _events(self, batching, reqs, cfg, params, **kw):
+        eng = make_serve_engine(params, cfg, ServeConfig(
+            slots=4, max_seq=96, timing="model", batching=batching, **kw))
+        return list(eng.run(reqs))
+
+    def test_lifecycle_and_continuous_beats_static(self, dense_setup):
+        cfg, params = dense_setup
+        reqs = poisson_requests(16, rate_rps=1000.0, seed=11,
+                                vocab_size=cfg.vocab_size)
+        per = {}
+        for batching in ("continuous", "static"):
+            evs = self._events(batching, reqs, cfg, params)
+            comp = {e.request: e for e in evs if e.kind == "complete"}
+            assert len(comp) == len(reqs)
+            for r in reqs:
+                mine = [e for e in evs if e.request == r.id]
+                kinds = [e.kind for e in mine]
+                assert kinds[0] == "arrival" and kinds[1] == "prefill" \
+                    and kinds[-1] == "complete"
+                ts = [e.t_ms for e in mine[1:]]       # clock monotone
+                assert ts == sorted(ts)
+                assert len(comp[r.id].tokens) == r.max_new_tokens
+                assert comp[r.id].latency_ms >= comp[r.id].ttft_ms > 0
+            per[batching] = max(e.t_ms for e in evs)
+        # same virtual cost model, same stream: continuous finishes sooner
+        assert per["continuous"] < per["static"]
+
+    def test_engines_generate_identical_tokens(self, dense_setup):
+        """Batching strategy must not change greedy outputs — only when
+        tokens are produced."""
+        cfg, params = dense_setup
+        reqs = poisson_requests(10, rate_rps=500.0, seed=13,
+                                vocab_size=cfg.vocab_size)
+        tok = {}
+        for batching in ("continuous", "static"):
+            evs = self._events(batching, reqs, cfg, params)
+            tok[batching] = {e.request: e.tokens for e in evs
+                             if e.kind == "complete"}
+        assert tok["continuous"] == tok["static"]
+
+    def test_model_clock_deterministic(self, dense_setup):
+        cfg, params = dense_setup
+        reqs = poisson_requests(6, rate_rps=400.0, seed=2,
+                                vocab_size=cfg.vocab_size)
+        a = self._events("continuous", reqs, cfg, params)
+        b = self._events("continuous", reqs, cfg, params)
+        assert [(e.kind, e.request, e.t_ms, e.token) for e in a] == \
+            [(e.kind, e.request, e.t_ms, e.token) for e in b]
+
+
+# ----------------------------------------------------------------------
+# CLI smoke
+# ----------------------------------------------------------------------
+class TestServeCLI:
+    def test_cli_smoke(self):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve",
+             "--arch", "mamba2-370m", "--requests", "3", "--rate", "300",
+             "--slots", "2", "--gen", "4", "--timing", "model"],
+            cwd=REPO, capture_output=True, text=True, timeout=900,
+            env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "3 requests" in r.stdout
+        assert "p99" in r.stdout
