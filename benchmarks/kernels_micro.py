@@ -67,7 +67,7 @@ def bench_conv2d_fwd_bwd(gate_atol: float = 1e-4):
     got = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
     want = jax.grad(loss_lax, argnums=(0, 1, 2))(x, w, b)
     errs = {"out": out_err}
-    for name, g, r in zip(("dx", "dw", "db"), got, want):
+    for name, g, r in zip(("dx", "dw", "db"), got, want, strict=True):
         errs[name] = float(jnp.abs(g - r).max())
     scale = float(max(jnp.abs(r).max() for r in want))
     derived = ",".join(f"{k}_err={v:.2e}" for k, v in errs.items())
@@ -141,7 +141,7 @@ def bench_dense(gate_atol: float = 1e-4):
     got = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
     want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
     errs = {"out": out_err}
-    for name, g, r in zip(("dx", "dw", "db"), got, want):
+    for name, g, r in zip(("dx", "dw", "db"), got, want, strict=True):
         errs[name] = float(jnp.abs(g - r).max())
     scale = float(max(jnp.abs(r).max() for r in want))
     derived = ",".join(f"{k}_err={v:.2e}" for k, v in errs.items())

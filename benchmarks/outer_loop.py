@@ -31,7 +31,6 @@ import sys
 import time
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core.bpt_trainer import BPTTrainer

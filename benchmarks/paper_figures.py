@@ -10,7 +10,6 @@ Fig. 10  inner-layer task scheduling (Alg. 4.2 scheduler)
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.cluster_sim import ClusterSim, make_heterogeneous_speeds
 from repro.core.dag import cnn_training_dag, priority_schedule

@@ -51,7 +51,7 @@ def _run_stream(params, cfg, batching: str, timing: str, reqs):
         # warmup replay on the SAME engine: compiles every prompt shape
         # off the clock (a full run ends with all slots evicted, so the
         # measured replay starts from a clean cache)
-        for ev in eng.run(reqs):
+        for _ev in eng.run(reqs):
             pass
     tok_ms, ttft, lat = [], [], []
     tokens = 0

@@ -5,10 +5,17 @@
 tree even when some other ``repro`` install exists (an editable install
 resolves to the same tree, so this is harmless there), and kills the
 historical ``PYTHONPATH=src`` hack.
+
+The repo root itself is appended too, so the test suite can import the
+in-tree tooling (``tools.reprolint`` — the single-decision-point and
+deprecation tests assert through the linter).
 """
 import os
 import sys
 
-_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(_ROOT, "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+if _ROOT not in sys.path:
+    sys.path.insert(1, _ROOT)

@@ -183,7 +183,7 @@ def restore(path: str, like, step: int | None = None, *,
         for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
     ]
     new_leaves = []
-    for key, leaf in zip(paths, leaves):
+    for key, leaf in zip(paths, leaves, strict=True):
         try:
             arr = data[key]
         except (OSError, ValueError, zipfile.BadZipFile, EOFError,

@@ -12,7 +12,7 @@ import importlib
 
 from repro.core.types import ModelConfig
 
-from .shapes import SHAPES, get_shape
+from .shapes import SHAPES, get_shape  # noqa: F401  (get_shape re-exported)
 
 _MODULES = {
     "yi-6b": "yi_6b",

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import heapq
-from typing import Iterable, Optional, Sequence
+from typing import Iterable, Sequence
 
 import numpy as np
 

@@ -198,7 +198,7 @@ def agwu_gamma(base_version: int, latest_version: int,
 
 def _agwu_apply_impl(global_w, local_w, base_w, scale):
     return jax.tree_util.tree_map(
-        lambda g, l, b: g + scale * (l - b), global_w, local_w, base_w)
+        lambda g, lw, b: g + scale * (lw - b), global_w, local_w, base_w)
 
 
 _agwu_apply = jax.jit(_agwu_apply_impl)

@@ -326,7 +326,7 @@ def plan_for_axes(cfg, *, nodes: int, model: int, batch_size: int = 32,
     picks, total = choices[fam]
 
     layer_plans = []
-    for (name, kind, dims, _), pick in zip(walk, picks):
+    for (name, kind, dims, _), pick in zip(walk, picks, strict=True):
         layer_plans.append(LayerPlan(
             name=name, kind=kind, parallel_dim=pick["dim"],
             spec=_SPEC_OF[pick["dim"]],

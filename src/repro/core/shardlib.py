@@ -64,7 +64,7 @@ def constrain_div(x, *logical_axes: Optional[str]):
     if _RULES is None:
         return x
     spec = []
-    for dim, a in zip(x.shape, logical_axes):
+    for dim, a in zip(x.shape, logical_axes, strict=True):
         ax = _RULES.get(a) if a is not None else None
         spec.append(ax if ax is not None and dim % _axis_size(ax) == 0
                     else None)

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 __all__ = ["ModelConfig", "ShapeConfig", "TrainConfig",
            "OUTER_STRATEGIES", "PARTITIONINGS", "OPTIMIZERS"]

@@ -69,7 +69,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                        jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
 
 
-def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+# forward-only for now: the fused backward is the ROADMAP "LM-family
+# kernels" item — training falls back to the ref path via ops.attention
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,  # reprolint: disable=RPL301
                            softcap: float = 0.0, q_tile: int = 128,
                            k_tile: int = 128, interpret: bool | None = None):
     """q: (B,H,Sq,D); k,v: (B,KH,Sk,D) -> (B,H,Sq,D).

@@ -24,7 +24,9 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
                   * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
-def rmsnorm_pallas(x, scale, eps: float = 1e-6, row_tile: int = 256,
+# forward-only for now: the fused backward is the ROADMAP "LM-family
+# kernels" item — training falls back to the ref path via ops.rmsnorm
+def rmsnorm_pallas(x, scale, eps: float = 1e-6, row_tile: int = 256,  # reprolint: disable=RPL301
                    interpret: bool | None = None):
     """x: (..., d); scale: (d,).  ``interpret=None`` -> ops._interpret()."""
     interpret = resolve_interpret(interpret)

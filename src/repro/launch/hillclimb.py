@@ -5,7 +5,7 @@ Two modes, both scored by the same roofline terms:
 * override mode (the historical driver): evaluate one (arch x shape x
   mesh) with ModelConfig overrides and print/record the roofline row.
 
-      PYTHONPATH=src python -m repro.launch.hillclimb --arch gemma2-27b \
+      python -m repro.launch.hillclimb --arch gemma2-27b \
           --shape train_4k --mesh pod --tag hc1a \
           --set bf16_params_compute=True --set mlp_megatron=True
 
@@ -16,8 +16,10 @@ Two modes, both scored by the same roofline terms:
   candidates.  The search IS the planner — this loop owns no cost model
   of its own.
 
-      PYTHONPATH=src python -m repro.launch.hillclimb --plan \
+      python -m repro.launch.hillclimb --plan \
           --cnn case1 --devices 8 --batch-size 32
+
+(``pip install -e .`` first; bare checkouts can prefix ``PYTHONPATH=src``.)
 
 XLA_FLAGS is only touched under ``__main__`` (never on import), and any
 pre-existing value is appended to, not clobbered.

@@ -13,7 +13,6 @@ ICI (3 links/chip assumed shared; we charge the per-link figure).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Optional
 
@@ -114,7 +113,8 @@ class RooflineReport:
     model_flops_: float
     per_device_hbm: float              # peak memory per device (bytes)
 
-    def terms(self, hw: HW = HW()) -> dict:
+    def terms(self, hw: HW | None = None) -> dict:
+        hw = hw or HW()
         t_c = self.hlo_flops / (self.chips * hw.peak_flops)
         t_m = self.hlo_bytes / (self.chips * hw.hbm_bw)
         t_x = self.coll_bytes / (self.chips * hw.ici_bw)

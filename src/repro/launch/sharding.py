@@ -23,7 +23,6 @@ AND the kernel tiles the round executes (plan == execution).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import numpy as np

@@ -6,8 +6,6 @@ can compile production shapes on placeholder devices.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +100,7 @@ def make_train_step(cfg: ModelConfig, optimizer: str = "adamw",
                               scan_unroll=scan_unroll)
 
     def train_step(params, opt_state, batch):
-        (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        (lval, aux), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
         if grad_clip:
             grads, gnorm = clip_by_global_norm(grads, grad_clip)
         else:
@@ -110,7 +108,7 @@ def make_train_step(cfg: ModelConfig, optimizer: str = "adamw",
         updates, opt_state = opt.update(grads, opt_state, params,
                                         learning_rate)
         params = apply_updates(params, updates)
-        return params, opt_state, {"loss": l, "grad_norm": gnorm}
+        return params, opt_state, {"loss": lval, "grad_norm": gnorm}
     return train_step
 
 

@@ -10,8 +10,6 @@ inside one lax.scan over layers) and gemma-2 attn logit soft-capping.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +88,7 @@ def chunked_attention(q, k, v, *, causal: bool = True,
         q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
 
         def kv_step(carry, inputs):
-            acc, m, l = carry
+            acc, m, lsum = carry
             ki, k_blk, v_blk = inputs
             k_pos = ki * k_chunk + jnp.arange(k_chunk)
             # scores: (B, q_chunk, KH, G, k_chunk)
@@ -107,7 +105,7 @@ def chunked_attention(q, k, v, *, causal: bool = True,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + p.sum(axis=-1)
+            l_new = lsum * alpha + p.sum(axis=-1)
             pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v_blk.dtype), v_blk,
                             preferred_element_type=jnp.float32)
             acc_new = acc * alpha[..., None] + pv
@@ -139,9 +137,9 @@ def chunked_attention(q, k, v, *, causal: bool = True,
                 return jax.lax.cond(live, inner_step,
                                     lambda c, _: (c, None), carry, inputs)
             step = guarded
-        (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
-                                      (ks_idx, kgs, vgs))
-        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        (acc, m, lsum), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                         (ks_idx, kgs, vgs))
+        out = acc / jnp.maximum(lsum, 1e-20)[..., None]
         return out.astype(q.dtype)
 
     qi_idx = jnp.arange(nq)

@@ -14,7 +14,6 @@ jax.grad implement Eq. 17-23 exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -101,7 +100,7 @@ def cnn_forward(params, images, cfg: CNNConfig):
     from repro.kernels import ops
     x = images
     shapes, _ = _conv_shapes(cfg)
-    for p, (_, _, _, pooled) in zip(params["conv"], shapes):
+    for p, (_, _, _, pooled) in zip(params["conv"], shapes, strict=True):
         x = layers.conv2d(p, x, padding="SAME", activation="relu")
         if pooled:
             x = ops.max_pool2d(x, window=2, stride=2)

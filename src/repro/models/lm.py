@@ -8,7 +8,6 @@ full sequence (vocab up to 256k would otherwise dominate memory).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import warnings
 from typing import Any, Optional
 
@@ -140,15 +139,15 @@ def chunked_cross_entropy(hidden, head_table, labels, cfg, chunk: int = 0):
 
     @jax.checkpoint
     def ce_chunk(carry, inp):
-        h, l = inp
+        h, lbl = inp
         logits = constrain(h @ table.T, "batch", None, "vocab")
         if cfg.final_softcap:
             logits = softcap(logits, cfg.final_softcap)
         logits = logits.astype(jnp.float32)
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(
-            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
-        valid = (l >= 0).astype(jnp.float32)
+            logits, jnp.maximum(lbl, 0)[..., None], axis=-1)[..., 0]
+        valid = (lbl >= 0).astype(jnp.float32)
         nll = (lse - gold) * valid
         return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
 

@@ -6,7 +6,6 @@ dry-run default (its 2x f32 moments are part of the memory roofline).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
@@ -63,7 +62,8 @@ def momentum(beta: float = 0.9) -> Optimizer:
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.01) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        def zeros(p):
+            return jnp.zeros_like(p, jnp.float32)
         return {
             "mu": jax.tree_util.tree_map(zeros, params),
             "nu": jax.tree_util.tree_map(zeros, params),

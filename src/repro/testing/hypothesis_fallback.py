@@ -136,7 +136,7 @@ def given(*arg_strategies, **kw_strategies):
         names = list(sig.parameters)
         if arg_strategies:
             bound = dict(zip(names[len(names) - len(arg_strategies):],
-                             arg_strategies))
+                             arg_strategies, strict=True))
         else:
             bound = dict(kw_strategies)
         missing = set(bound) - set(names)

@@ -65,10 +65,14 @@ class TestArchSmoke:
         batch = make_batch(cfg)
         if cfg.arch_type == "encdec":
             params = encdec.init_encdec_params(key, cfg)
-            loss_fn = lambda p, b: encdec.encdec_loss_fn(p, b, cfg)[0]
+
+            def loss_fn(p, b):
+                return encdec.encdec_loss_fn(p, b, cfg)[0]
         else:
             params = lm.init_params(key, cfg)
-            loss_fn = lambda p, b: lm.loss_fn(p, b, cfg)[0]
+
+            def loss_fn(p, b):
+                return lm.loss_fn(p, b, cfg)[0]
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         assert np.isfinite(float(loss))
         opt = adamw()

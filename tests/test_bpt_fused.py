@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core.bpt_trainer import BPTTrainer
-from repro.core.gwu import agwu_gamma, broadcast_tree, sgwu_merge
+from repro.core.gwu import agwu_gamma, broadcast_tree
 from repro.core.param_server import ParameterServer
 from repro.core.types import TrainConfig
 from repro.data.pipeline import IDPADataset
@@ -44,7 +44,8 @@ class TestFusedSequentialEquivalence:
         np.testing.assert_allclose(fused.losses, seq.losses,
                                    rtol=1e-5, atol=1e-6)
         for a, b in zip(jax.tree_util.tree_leaves(fused.final_params),
-                        jax.tree_util.tree_leaves(seq.final_params)):
+                        jax.tree_util.tree_leaves(seq.final_params),
+                        strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-5, atol=1e-6)
 
@@ -85,7 +86,7 @@ class TestStackedParameterServer:
         ps_list = ParameterServer(_tree(0.0), num_workers=3)
         for j in range(3):
             ps_list.pull(j)
-        ps_list.push_sgwu(list(zip(range(3), locals_, qs)))
+        ps_list.push_sgwu(list(zip(range(3), locals_, qs, strict=True)))
 
         ps_stacked = ParameterServer(_tree(0.0), num_workers=3)
         ps_stacked.pull_all_stacked()
@@ -94,7 +95,8 @@ class TestStackedParameterServer:
         ps_stacked.push_sgwu_stacked(stacked, qs)
 
         for a, b in zip(jax.tree_util.tree_leaves(ps_list.global_weights),
-                        jax.tree_util.tree_leaves(ps_stacked.global_weights)):
+                        jax.tree_util.tree_leaves(ps_stacked.global_weights),
+                        strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-6)
         assert ps_list.comm_bytes == ps_stacked.comm_bytes
@@ -105,7 +107,8 @@ class TestStackedParameterServer:
         stacked, version = ps.pull_all_stacked()
         assert version == 0
         for leaf, ref in zip(jax.tree_util.tree_leaves(stacked),
-                             jax.tree_util.tree_leaves(ps.global_weights)):
+                             jax.tree_util.tree_leaves(ps.global_weights),
+                             strict=True):
             assert leaf.shape == (4,) + ref.shape
             np.testing.assert_allclose(np.asarray(leaf),
                                        np.broadcast_to(np.asarray(ref),

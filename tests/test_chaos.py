@@ -111,7 +111,8 @@ def _final_weights(ev):
 
 
 def _max_diff(ws_a, ws_b):
-    return max(float(np.abs(a - b).max()) for a, b in zip(ws_a, ws_b))
+    return max(float(np.abs(a - b).max())
+               for a, b in zip(ws_a, ws_b, strict=True))
 
 
 def _record_trace(tag, events):
@@ -271,7 +272,7 @@ class TestCrashResume:
         hooks = TrainHooks(checkpoint_every=2, checkpoint_dir=str(tmp_path))
         consumed = 0
         stop_at = 8 if engine == "heap" else 3
-        for ev in crashed.run(rounds, hooks):
+        for _ev in crashed.run(rounds, hooks):
             consumed += 1
             if consumed >= stop_at:
                 break
@@ -314,7 +315,7 @@ class TestCrashResume:
         tr = _make_trainer(m=m, batches=2, fused_outer=True)
         hooks = TrainHooks(checkpoint_every=2, checkpoint_dir=str(tmp_path))
         consumed = 0
-        for ev in tr.run(rounds, hooks):
+        for _ev in tr.run(rounds, hooks):
             consumed += 1
             if consumed >= 4:     # state checkpoint for event 4 on disk
                 break
@@ -518,7 +519,7 @@ class TestAdversarialHeap:
         # Eq. 10 regression pin: the straggler's late pushes carry the
         # smallest gammas of the run (stalest base version)
         assert len(gamma_log) == m * rounds
-        straggler_gammas = [g for ev, g in zip(events, gamma_log)
+        straggler_gammas = [g for ev, g in zip(events, gamma_log, strict=True)
                             if ev.node == 2]
         assert min(gamma_log) == min(straggler_gammas)
         assert gamma_log == GAMMAS_STRAGGLER, \

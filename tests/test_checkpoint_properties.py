@@ -82,7 +82,7 @@ def _assert_trees_equal(a, b):
     la = jax.tree_util.tree_leaves(a)
     lb = jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         x, y = np.asarray(x), np.asarray(y)
         assert x.dtype == y.dtype, (x.dtype, y.dtype)
         assert x.shape == y.shape

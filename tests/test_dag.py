@@ -63,7 +63,7 @@ class TestExecutedGrid:
     def test_chosen_tile_schedules_no_worse_than_untiled(self):
         for batch, cout in [(1, 64), (2, 32), (5, 16)]:
             tile = choose_oc_tile(batch, cout, workers=8)
-            def makespan(t):
+            def makespan(t, batch=batch, cout=cout):
                 dag = TaskDAG()
                 conv_grid_tasks(dag, batch, cout, t)
                 return priority_schedule(dag, 8).makespan
@@ -108,7 +108,7 @@ class TestFCBlockModel:
         for d_out in (64, 500, 1000):
             block = choose_fc_block(d_out, workers=8)
 
-            def makespan(bl):
+            def makespan(bl, d_out=d_out):
                 dag = TaskDAG()
                 fc_grid_tasks(dag, d_out, bl)
                 return priority_schedule(dag, 8).makespan

@@ -61,7 +61,8 @@ def _run_sgwu(m: int, *, device: bool, uneven: bool = False, rounds: int = 3,
 def _assert_reports_close(dev, ref, rtol=1e-5, atol=1e-6):
     np.testing.assert_allclose(dev.losses, ref.losses, rtol=rtol, atol=atol)
     for a, b in zip(jax.tree_util.tree_leaves(dev.final_params),
-                    jax.tree_util.tree_leaves(ref.final_params)):
+                    jax.tree_util.tree_leaves(ref.final_params),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=rtol, atol=atol)
 
@@ -202,12 +203,13 @@ class TestShardedMerge:
         merged, new_stacked = sgwu_merge_and_rebroadcast_sharded(
             stacked, qs, mesh)
         for a, b in zip(jax.tree_util.tree_leaves(merged),
-                        jax.tree_util.tree_leaves(want)):
+                        jax.tree_util.tree_leaves(want), strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-6, atol=1e-7)
         # the rebroadcast stack holds m replicas of the merged tree
         for leaf, mg in zip(jax.tree_util.tree_leaves(new_stacked),
-                            jax.tree_util.tree_leaves(merged)):
+                            jax.tree_util.tree_leaves(merged),
+                            strict=True):
             np.testing.assert_allclose(
                 np.asarray(leaf),
                 np.broadcast_to(np.asarray(mg)[None], leaf.shape),
@@ -231,7 +233,8 @@ class TestShardedMerge:
             jax.device_put(sub(), jax.sharding.NamedSharding(
                 mesh, jax.sharding.PartitionSpec("nodes"))), qs)
         for a, b in zip(jax.tree_util.tree_leaves(host.global_weights),
-                        jax.tree_util.tree_leaves(dev.global_weights)):
+                        jax.tree_util.tree_leaves(dev.global_weights),
+                        strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-6, atol=1e-7)
         assert host.comm_bytes == dev.comm_bytes
@@ -240,7 +243,8 @@ class TestShardedMerge:
         again, version = dev.pull_all_stacked()
         assert version == 1
         for leaf, mg in zip(jax.tree_util.tree_leaves(again),
-                            jax.tree_util.tree_leaves(dev.global_weights)):
+                            jax.tree_util.tree_leaves(dev.global_weights),
+                            strict=True):
             np.testing.assert_allclose(
                 np.asarray(leaf),
                 np.broadcast_to(np.asarray(mg)[None], leaf.shape),
@@ -267,7 +271,8 @@ class TestAgwuDeviceDeltas:
         delta.push_agwu_delta(0, tree_sub(local, base), 0.7,
                               virtual_time=1.0)
         for a, b in zip(jax.tree_util.tree_leaves(full.global_weights),
-                        jax.tree_util.tree_leaves(delta.global_weights)):
+                        jax.tree_util.tree_leaves(delta.global_weights),
+                        strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-6, atol=1e-7)
         assert full.comm_bytes == delta.comm_bytes

@@ -1,5 +1,4 @@
 """SGWU (Eq. 7) / AGWU (Eq. 9-10) math tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -74,7 +73,7 @@ class TestParameterServer:
         w0 = tree(0.0)
         ps = ParameterServer(w0, num_workers=3)
         K = 4
-        for it in range(K):
+        for _it in range(K):
             for j in range(3):
                 w, _ = ps.pull(j)
                 ps.push_agwu(j, tree(1.0), accuracy=0.5)

@@ -53,7 +53,8 @@ class TestPallasTrainingPath:
         np.testing.assert_allclose(pal_rep.losses, ref_rep.losses,
                                    rtol=1e-4, atol=1e-6)
         for a, b in zip(jax.tree_util.tree_leaves(pal_rep.final_params),
-                        jax.tree_util.tree_leaves(ref_rep.final_params)):
+                        jax.tree_util.tree_leaves(ref_rep.final_params),
+                        strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-3, atol=1e-5)
 
@@ -134,7 +135,8 @@ class TestWholeNetworkPallas:
         assert ops.fallback_events() == {}
         np.testing.assert_allclose(float(loss_p), float(loss_r), rtol=1e-5)
         for g_p, g_r in zip(jax.tree_util.tree_leaves(grads_p),
-                            jax.tree_util.tree_leaves(grads_r)):
+                            jax.tree_util.tree_leaves(grads_r),
+                            strict=True):
             scale = max(float(jnp.abs(g_r).max()), 1.0)
             np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_r),
                                        atol=1e-4 * scale, rtol=1e-4)

@@ -155,7 +155,7 @@ class TestDensePallas:
 
         got = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
         want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
-        for g, r, name in zip(got, want, ("dx", "dw", "db")):
+        for g, r, name in zip(got, want, ("dx", "dw", "db"), strict=True):
             np.testing.assert_allclose(np.asarray(g), np.asarray(r),
                                        atol=1e-4, rtol=1e-4,
                                        err_msg=f"{name} mismatch")

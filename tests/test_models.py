@@ -1,5 +1,4 @@
 """Model-layer correctness: chunked attention, SSD, MoE, decode consistency."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -283,6 +283,6 @@ class TestChannelCollectives:
             out_specs=(P(), (P(), P())), check_rep=False)(x, w, b)
         np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
                                    rtol=1e-6)
-        for g, wg in zip(got[1], want[1]):
+        for g, wg in zip(got[1], want[1], strict=True):
             np.testing.assert_allclose(np.asarray(g), np.asarray(wg),
                                        rtol=1e-6, atol=1e-7)

@@ -1,0 +1,499 @@
+"""reprolint fixture suite: every rule exercised on good and bad
+in-memory snippets, suppression-comment semantics, the trace-scope
+closure (nested jit scopes, aliases, the timer allowlist), the CLI
+surface, and the self-check that the repo itself lints clean.
+
+These tests are pure stdlib + the in-tree linter — no JAX import — so
+they run first and fast.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from tools.reprolint import (ALL_RULES, lint_paths, lint_source,
+                             lint_sources)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+def lint(src, path="snippet.py", only=None):
+    return lint_source(textwrap.dedent(src), path=path, only=only)
+
+
+# ----------------------------------------------------------------------
+# RPL101/RPL102 — single decision point
+# ----------------------------------------------------------------------
+class TestDispatchRules:
+    def test_flags_config_attribute_read(self):
+        out = lint("""
+            def pick(tc):
+                if tc.fused_outer:
+                    return "fused"
+            """, path="src/repro/core/bpt_trainer.py", only=["RPL101"])
+        assert rules_of(out) == ["RPL101"]
+        assert "fused_outer" in out[0].message
+
+    def test_flags_getattr_spelling(self):
+        out = lint("""
+            def pick(cfg):
+                return getattr(cfg, "mesh_name")
+            """, path="src/repro/core/x.py", only=["RPL101"])
+        assert rules_of(out) == ["RPL101"]
+
+    def test_dotted_receiver_terminal_matches(self):
+        out = lint("""
+            class T:
+                def go(self):
+                    return self.tc.device_outer
+            """, path="src/repro/core/x.py", only=["RPL101"])
+        assert rules_of(out) == ["RPL101"]
+
+    def test_engine_module_is_allowed(self):
+        out = lint("""
+            def resolve_engine(tc):
+                return tc.fused_outer, tc.mesh_name
+            """, path="src/repro/core/engine.py", only=["RPL101"])
+        assert out == []
+
+    def test_non_config_receiver_is_clean(self):
+        out = lint("""
+            def run(args, plan):
+                return args.batching, plan.batching
+            """, path="src/repro/launch/serve.py", only=["RPL102"])
+        assert out == []
+
+    def test_constructor_keyword_is_clean(self):
+        out = lint("""
+            def mk():
+                return TrainConfig(fused_outer=True, mesh_name="pod")
+            """, path="src/repro/core/x.py", only=["RPL101"])
+        assert out == []
+
+    def test_serve_fields_flag_outside_serving_engine(self):
+        out = lint("""
+            def pick(sc):
+                return sc.batching == "continuous" and sc.timing
+            """, path="src/repro/serving/cache.py", only=["RPL102"])
+        assert sorted(rules_of(out)) == ["RPL102", "RPL102"]
+
+
+# ----------------------------------------------------------------------
+# RPL201/RPL202 — trace hygiene
+# ----------------------------------------------------------------------
+class TestTraceRules:
+    def test_host_sync_in_jitted_function(self):
+        out = lint("""
+            import jax
+
+            @jax.jit
+            def step(x):
+                jax.block_until_ready(x)
+                return x
+            """, only=["RPL201"])
+        assert rules_of(out) == ["RPL201"]
+        assert "block_until_ready" in out[0].message
+
+    def test_callsite_wrapping_and_transitive_reach(self):
+        # helper() is only reachable through step(), which is jitted at
+        # a call site — the closure must follow both hops
+        out = lint("""
+            import jax, numpy as np
+
+            def helper(x):
+                return np.asarray(x)
+
+            def step(x):
+                return helper(x)
+
+            run = jax.jit(step)
+            """, only=["RPL201"])
+        assert rules_of(out) == ["RPL201"]
+        assert "np.asarray" in out[0].message
+
+    def test_nested_jit_scope_inner_def(self):
+        # a def nested inside a traced def runs at trace time too
+        out = lint("""
+            import jax, time
+
+            @jax.jit
+            def outer(x):
+                def inner(y):
+                    return y * time.perf_counter()
+                return inner(x)
+            """, only=["RPL202"])
+        assert rules_of(out) == ["RPL202"]
+        assert "inner" in out[0].message or "outer" in out[0].message
+
+    def test_partial_decorator_and_scan_body(self):
+        out = lint("""
+            import jax, random
+            from functools import partial
+
+            def body(carry, x):
+                return carry + random.random(), x
+
+            def roll(xs):
+                return jax.lax.scan(body, 0.0, xs)
+            """, only=["RPL202"])
+        assert rules_of(out) == ["RPL202"]
+
+    def test_untraced_function_is_clean(self):
+        out = lint("""
+            import time
+
+            def bench(f):
+                t0 = time.perf_counter()
+                f()
+                return time.perf_counter() - t0
+            """, only=["RPL201", "RPL202"])
+        assert out == []
+
+    def test_jax_random_is_not_nondet(self):
+        out = lint("""
+            import jax
+
+            @jax.jit
+            def draw(key):
+                return jax.random.normal(key, (4,))
+            """, only=["RPL202"])
+        assert out == []
+
+    def test_timer_allowlist_exempts_measured_timer(self):
+        out = lint("""
+            import time, jax
+
+            class MeasuredTimer:
+                def call(self, f, x):
+                    t0 = time.perf_counter()
+                    y = jax.block_until_ready(f(x))
+                    return y, time.perf_counter() - t0
+
+            probe = jax.jit(MeasuredTimer.call)
+            """, only=["RPL201", "RPL202"])
+        assert out == []
+
+    def test_item_pull_flags_but_methodful_item_does_not(self):
+        out = lint("""
+            import jax
+
+            @jax.jit
+            def bad(x):
+                return float(x.item())
+
+            @jax.jit
+            def fine(d):
+                return d.item(0)
+            """, only=["RPL201"])
+        assert rules_of(out) == ["RPL201"]
+        assert out[0].line == 6
+
+
+# ----------------------------------------------------------------------
+# RPL301/RPL302/RPL303 — kernel contracts
+# ----------------------------------------------------------------------
+KERNEL_OK = """
+import jax
+from jax.experimental import pallas as pl
+
+@jax.custom_vjp
+def dense_pallas(x, w):
+    return pl.pallas_call(lambda r: r)(x, w)
+
+def _fwd(x, w):
+    return dense_pallas(x, w), (x, w)
+
+def _bwd(res, g):
+    return g, g
+
+dense_pallas.defvjp(_fwd, _bwd)
+"""
+
+KERNEL_NO_VJP = """
+from jax.experimental import pallas as pl
+
+def dense_pallas(x, w):
+    return pl.pallas_call(lambda r: r)(x, w)
+"""
+
+OPS_ROUTING = """
+def dense(x, w, impl="auto"):
+    if impl == "pallas":
+        try:
+            from . import dense_kernel
+            return dense_kernel.dense_pallas(x, w)
+        except Exception as e:
+            _fallback("dense", str(e), explicit=(impl == "pallas"))
+    return _dense_ref(x, w)
+"""
+
+
+class TestKernelRules:
+    def test_missing_vjp_flags(self):
+        out = lint_sources(
+            {"src/repro/kernels/dense_kernel.py": KERNEL_NO_VJP},
+            only=["RPL301"])
+        assert rules_of(out) == ["RPL301"]
+        assert "dense_pallas" in out[0].message
+
+    def test_paired_vjp_is_clean(self):
+        out = lint_sources(
+            {"src/repro/kernels/dense_kernel.py": KERNEL_OK},
+            only=["RPL301"])
+        assert out == []
+
+    def test_rule_skips_non_kernel_modules(self):
+        out = lint_sources({"src/repro/models/cnn.py": KERNEL_NO_VJP},
+                           only=["RPL301"])
+        assert out == []
+
+    def test_unrouted_kernel_flags(self):
+        out = lint_sources({
+            "src/repro/kernels/dense_kernel.py": KERNEL_OK,
+            "src/repro/kernels/ops.py": "def dense(x, w):\n    return x\n",
+        }, only=["RPL303"])
+        assert rules_of(out) == ["RPL303"]
+
+    def test_routed_kernel_is_clean(self):
+        out = lint_sources({
+            "src/repro/kernels/dense_kernel.py": KERNEL_OK,
+            "src/repro/kernels/ops.py": OPS_ROUTING,
+        }, only=["RPL303"])
+        assert out == []
+
+    def test_silent_fallback_flags(self):
+        out = lint("""
+            def dense(x, w, impl="auto"):
+                if impl == "pallas":
+                    y = _try_kernel(x, w)
+                return _dense_ref(x, w)
+            """, path="src/repro/kernels/ops.py", only=["RPL302"])
+        assert rules_of(out) == ["RPL302"]
+
+    def test_fallback_contract_is_clean(self):
+        out = lint_sources({"src/repro/kernels/ops.py": OPS_ROUTING},
+                           only=["RPL302"])
+        assert out == []
+
+    def test_suite_ending_in_return_is_clean(self):
+        out = lint("""
+            def rmsnorm(x, s, impl="auto"):
+                if impl == "pallas":
+                    return _rmsnorm_pallas(x, s)
+                return _rmsnorm_ref(x, s)
+            """, path="src/repro/kernels/ops.py", only=["RPL302"])
+        assert out == []
+
+
+# ----------------------------------------------------------------------
+# RPL401/RPL402/RPL403 — deprecation bans
+# ----------------------------------------------------------------------
+class TestDeprecationRules:
+    def test_greedy_generate_import_and_call_flag(self):
+        out = lint("""
+            from repro.launch.serve import greedy_generate
+
+            def go(params, cfg, prompts):
+                return greedy_generate(params, cfg, prompts, 16, 4)
+            """, path="examples/demo.py", only=["RPL401"])
+        assert rules_of(out) == ["RPL401", "RPL401"]
+
+    def test_shim_module_is_allowed(self):
+        out = lint("def greedy_generate(*a):\n    return None\n",
+                   path="src/repro/launch/serve.py", only=["RPL401"])
+        assert out == []
+
+    def test_legacy_init_cache_order_flags(self):
+        out = lint("""
+            def warm(cfg):
+                return init_cache(cfg, 2, 16)
+            """, only=["RPL402"])
+        assert rules_of(out) == ["RPL402"]
+
+    def test_legacy_getattr_spelling_flags(self):
+        out = lint("""
+            def warm(lm, cfg):
+                return getattr(lm, "init_cache")(cfg, 2, 16)
+            """, only=["RPL402"])
+        assert rules_of(out) == ["RPL402"]
+
+    def test_new_order_is_clean(self):
+        out = lint("""
+            def warm(cfg):
+                return init_cache(2, 16, cfg=cfg)
+            """, only=["RPL402"])
+        assert out == []
+
+    def test_pythonpath_runline_flags_with_line_number(self):
+        out = lint('''
+            """Driver.
+
+                PYTHONPATH=src python -m repro.launch.x --go
+            """
+            X = 1
+            ''', only=["RPL403"])
+        assert rules_of(out) == ["RPL403"]
+        assert out[0].line == 4
+
+    def test_prose_mention_is_clean(self):
+        out = lint('''
+            """Driver.
+
+                python -m repro.launch.x --go
+
+            (bare checkouts can prefix ``PYTHONPATH=src``.)
+            """
+            ''', only=["RPL403"])
+        assert out == []
+
+
+# ----------------------------------------------------------------------
+# RPL501 — donation safety
+# ----------------------------------------------------------------------
+class TestDonationRule:
+    def test_reuse_after_donation_flags(self):
+        out = lint("""
+            import jax
+
+            def train(step, params, opt, batches):
+                run = jax.jit(step, donate_argnums=(0,))
+                out = run(params, opt)
+                return params["w"]
+            """, only=["RPL501"])
+        assert rules_of(out) == ["RPL501"]
+        assert "`params`" in out[0].message
+
+    def test_rebind_from_result_is_clean(self):
+        out = lint("""
+            import jax
+
+            def train(step, params, opt, batches):
+                run = jax.jit(step, donate_argnums=(0, 1))
+                for b in batches:
+                    params, opt = run(params, opt)
+                return params
+            """, only=["RPL501"])
+        assert out == []
+
+    def test_non_donated_arg_is_clean(self):
+        out = lint("""
+            import jax
+
+            def train(step, params, opt):
+                run = jax.jit(step, donate_argnums=(0,))
+                new_params = run(params, opt)
+                return opt
+            """, only=["RPL501"])
+        assert out == []
+
+    def test_donation_does_not_leak_across_functions(self):
+        out = lint("""
+            import jax
+
+            def a(step, params):
+                run = jax.jit(step, donate_argnums=(0,))
+                return run(params)
+
+            def b(params):
+                return params
+            """, only=["RPL501"])
+        assert out == []
+
+
+# ----------------------------------------------------------------------
+# suppressions, parse errors, engine surface
+# ----------------------------------------------------------------------
+class TestEngineBehaviour:
+    def test_inline_suppression_by_id_and_name(self):
+        src = """
+            def pick(tc):
+                a = tc.fused_outer  # reprolint: disable=RPL101
+                b = tc.device_outer  # reprolint: disable=dispatch-train
+                c = tc.mesh_name
+            """
+        out = lint(src, path="src/repro/core/x.py", only=["RPL101"])
+        assert len(out) == 1 and out[0].line == 5
+
+    def test_suppress_all_token(self):
+        out = lint(
+            "def f(tc):\n"
+            "    return tc.fused_outer  # reprolint: disable=all\n",
+            path="src/repro/core/x.py", only=["RPL101"])
+        assert out == []
+
+    def test_suppression_is_line_scoped(self):
+        out = lint(
+            "# reprolint: disable=RPL101\n"
+            "def f(tc):\n"
+            "    return tc.fused_outer\n",
+            path="src/repro/core/x.py", only=["RPL101"])
+        assert len(out) == 1
+
+    def test_parse_error_reports_rpl000_unsuppressable(self):
+        out = lint_source(
+            "def broken(:  # reprolint: disable=all\n")
+        assert rules_of(out) == ["RPL000"]
+
+    def test_unknown_rule_selection_raises(self):
+        try:
+            lint_source("x = 1\n", only=["RPL999"])
+        except ValueError as e:
+            assert "RPL999" in str(e)
+        else:
+            raise AssertionError("expected ValueError")
+
+    def test_rule_ids_unique_and_named(self):
+        ids = [r.id for r in ALL_RULES]
+        names = [r.name for r in ALL_RULES]
+        assert len(set(ids)) == len(ids)
+        assert len(set(names)) == len(names)
+        assert all(r.description for r in ALL_RULES)
+
+    def test_findings_sorted_and_formatted(self):
+        out = lint("""
+            def pick(tc):
+                b = tc.device_outer
+                a = tc.fused_outer
+            """, path="src/repro/core/x.py", only=["RPL101"])
+        assert [f.line for f in out] == sorted(f.line for f in out)
+        assert out[0].format().startswith("src/repro/core/x.py:3:")
+
+
+# ----------------------------------------------------------------------
+# the repo itself + the CLI
+# ----------------------------------------------------------------------
+class TestRepoIsClean:
+    def test_repo_lints_clean(self):
+        """The acceptance bar for the whole PR: the tree carries zero
+        unsuppressed findings across every rule."""
+        findings = lint_paths(
+            [str(REPO / d) for d in ("src", "tests", "benchmarks")
+             if (REPO / d).exists()])
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+    def test_cli_json_and_exit_codes(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(tc):\n    return tc.fused_outer\n")
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.reprolint", str(bad),
+             "--format", "json", "--json-report",
+             str(tmp_path / "report.json")],
+            cwd=REPO, capture_output=True, text=True, timeout=120)
+        assert proc.returncode == 1
+        payload = json.loads(proc.stdout)
+        assert payload["by_rule"] == {"RPL101": 1}
+        report = json.loads((tmp_path / "report.json").read_text())
+        assert report["findings"][0]["rule"] == "RPL101"
+
+        good = tmp_path / "good.py"
+        good.write_text("x = 1\n")
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.reprolint", str(good)],
+            cwd=REPO, capture_output=True, text=True, timeout=120)
+        assert proc.returncode == 0
+        assert "0 findings" in proc.stdout

@@ -3,11 +3,11 @@ invariants, the serve-side single-decision-point guarantee, the
 greedy_generate deprecation shim, engine streaming semantics under the
 deterministic cost clock, and a smoke test of the rebuilt CLI.
 
-Mirrors test_engine.py's structure: grep-enforced config hygiene plus
-behavioural contracts over the streaming event API.
+Mirrors test_engine.py's structure: linter-enforced config hygiene
+(reprolint rules RPL102/RPL402) plus behavioural contracts over the
+streaming event API.
 """
 import os
-import re
 import subprocess
 import sys
 import warnings
@@ -192,23 +192,20 @@ class TestSlotInvariants:
 
 
 # ----------------------------------------------------------------------
-# config hygiene (grep-enforced, like test_engine.py)
+# config hygiene (linter-enforced, like test_engine.py)
 # ----------------------------------------------------------------------
 class TestSingleDecisionPoint:
     def test_only_resolve_serve_engine_reads_dispatch_fields(self):
         """No module under src/repro other than serving/engine.py reads
         the ServeConfig ``batching`` / ``timing`` dispatch fields off a
-        config object."""
+        config object.  Asserted through reprolint's AST pass (rule
+        RPL102), the successor of the old raw-source regex — attribute
+        reads match on the tree and the getattr spelling is caught."""
+        from tools.reprolint import lint_paths
         root = Path(serve_engine_module.__file__).parents[1]   # src/repro
-        flag = re.compile(
-            r"\b(?:sc|serve|serve_cfg|serve_config|cfg|config|"
-            r"self\.serve|self\.sc)\.(?:batching|timing)\b")
         offenders = [
-            f"{path.relative_to(root)}:{lineno}"
-            for path in sorted(root.rglob("*.py"))
-            if not (path.name == "engine.py" and path.parent.name == "serving")
-            for lineno, line in enumerate(path.read_text().splitlines(), 1)
-            if flag.search(line)
+            f"{Path(f.path).relative_to(root)}:{f.line}"
+            for f in lint_paths([str(root)], only=["RPL102"])
         ]
         assert not offenders, (
             "ServeConfig dispatch fields must only be inspected by "
@@ -216,16 +213,14 @@ class TestSingleDecisionPoint:
 
     def test_no_caller_uses_legacy_init_cache_order(self):
         """The cfg-first ``init_cache(cfg, batch, max_seq)`` order is
-        shimmed but must not be used anywhere in the tree."""
-        legacy = re.compile(
-            r"\binit_cache\(\s*(?:cfg|config|model_cfg|self\.cfg)\b")
+        shimmed but must not gain callers (rule RPL402; the deliberate
+        shim exercise below carries an inline suppression)."""
+        from tools.reprolint import lint_paths
         offenders = [
-            f"{path.relative_to(REPO)}:{lineno}"
-            for scan in (REPO / "src", REPO / "tests", REPO / "benchmarks")
-            for path in sorted(scan.rglob("*.py"))
-            if path.name != "lm.py" and path != Path(__file__).resolve()
-            for lineno, line in enumerate(path.read_text().splitlines(), 1)
-            if legacy.search(line)
+            f"{Path(f.path).relative_to(REPO)}:{f.line}"
+            for f in lint_paths(
+                [str(REPO / d) for d in ("src", "tests", "benchmarks")],
+                only=["RPL402"])
         ]
         assert not offenders, \
             f"legacy init_cache(cfg, ...) call order found: {offenders}"
@@ -234,7 +229,8 @@ class TestSingleDecisionPoint:
         cfg, _ = dense_setup
         with warnings.catch_warnings(record=True) as caught:
             warnings.simplefilter("always")
-            old = getattr(lm, "init_cache")(cfg, 2, 16)
+            old = getattr(  # noqa: B009  # reprolint: disable=RPL402
+                lm, "init_cache")(cfg, 2, 16)
         assert any(issubclass(w.category, DeprecationWarning)
                    for w in caught)
         new = lm.init_cache(2, 16, cfg)
@@ -283,12 +279,12 @@ class TestResolve:
 # ----------------------------------------------------------------------
 class TestGreedyGenerateShim:
     def test_shim_warns_and_matches_engine(self, dense_setup):
-        from repro.launch.serve import greedy_generate
+        from repro.launch.serve import greedy_generate  # reprolint: disable=RPL401
         cfg, params = dense_setup
         prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 6), 0,
                                      cfg.vocab_size, dtype=jnp.int32)
         with pytest.warns(DeprecationWarning):
-            shim_out = greedy_generate(params, cfg, prompts, max_seq=24,
+            shim_out = greedy_generate(params, cfg, prompts, max_seq=24,  # reprolint: disable=RPL401
                                        gen=5)
         eng = make_serve_engine(params, cfg, ServeConfig(slots=2,
                                                          max_seq=24))

@@ -5,17 +5,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.checkpointing import checkpoint
 from repro.data.pipeline import IDPADataset, host_batch, pack_sequences
 from repro.data.synthetic import image_dataset, lm_corpus
 from repro.models.cnn import (CNNConfig, cnn_accuracy, cnn_forward, cnn_loss,
                               init_cnn, make_case)
-from repro.optim.optimizers import (adamw, apply_updates,
-                                    clip_by_global_norm, global_norm,
-                                    make_optimizer, momentum, sgd,
+from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
+                                    global_norm, make_optimizer,
                                     warmup_cosine)
 
 
@@ -25,8 +22,11 @@ class TestOptimizers:
         opt = make_optimizer(name)
         params = {"w": jnp.array([5.0, -3.0])}
         st_ = opt.init(params)
-        loss = lambda p: jnp.sum(p["w"] ** 2)
-        for i in range(200):
+
+        def loss(p):
+            return jnp.sum(p["w"] ** 2)
+
+        for _ in range(200):
             g = jax.grad(loss)(params)
             upd, st_ = opt.update(g, st_, params, 0.05)
             params = apply_updates(params, upd)
@@ -72,7 +72,7 @@ class TestData:
         assert c.min() >= 0 and c.max() < 256
         # Markov structure: conditional entropy < marginal entropy
         from collections import Counter
-        pairs = Counter(zip(c[:-1], c[1:]))
+        pairs = Counter(zip(c[:-1], c[1:], strict=True))
         marg = Counter(c)
         n = len(c) - 1
         h_joint = -sum(v / n * np.log(v / n) for v in pairs.values())

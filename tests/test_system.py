@@ -8,7 +8,6 @@
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs
@@ -87,11 +86,11 @@ class TestLMEndToEnd:
 
 class TestServing:
     def test_greedy_generation(self):
-        from repro.launch.serve import greedy_generate
+        from repro.launch.serve import greedy_generate  # reprolint: disable=RPL401
         cfg = configs.get_reduced("hymba-1.5b")
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
         prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
                                      cfg.vocab_size, dtype=jnp.int32)
-        out = greedy_generate(params, cfg, prompts, max_seq=16, gen=4)
+        out = greedy_generate(params, cfg, prompts, max_seq=16, gen=4)  # reprolint: disable=RPL401
         assert out.shape == (2, 4)
         assert int(out.min()) >= 0 and int(out.max()) < cfg.vocab_size

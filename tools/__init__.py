@@ -1,0 +1,1 @@
+"""Repo tooling: standalone scripts (check_links) + the reprolint package."""

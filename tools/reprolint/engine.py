@@ -1,0 +1,233 @@
+"""reprolint rule engine: file contexts, suppressions, runner, reporting.
+
+The linter is a repo-specific static-analysis pass over Python ASTs
+(stdlib ``ast`` only — no third-party deps, so it runs anywhere the repo
+checks out).  A ``Rule`` sees one ``FileContext`` at a time plus the
+``Project`` (for cross-file contracts like "kernel entry points must be
+routed through ops.py") and yields ``Finding``s; the engine filters them
+through per-line ``# reprolint: disable=RULE`` suppressions and renders
+text or JSON.  Rule IDs (``RPL101``) and symbolic names
+(``dispatch-train``) are interchangeable in suppressions and ``--rules``.
+
+See docs/LINTING.md for the rule catalogue and the contract each rule
+machine-checks.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Iterable, Iterator, Optional
+
+__all__ = [
+    "Finding", "FileContext", "Project", "Rule",
+    "lint_paths", "lint_sources", "lint_source", "run_rules",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+    rule: str          # "RPL101"
+    name: str          # "dispatch-train"
+    path: str          # file path as scanned (posix separators)
+    line: int          # 1-indexed
+    col: int           # 0-indexed (ast convention)
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule} [{self.name}] {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ``# reprolint: disable=RPL101,kernel-vjp`` — suppresses the named rules
+# for findings anchored on that physical line ("all" suppresses every rule)
+_SUPPRESS = re.compile(r"#\s*reprolint:\s*disable=([A-Za-z0-9_\-, ]+)")
+
+
+class FileContext:
+    """One scanned file: source text, parsed AST, suppression map.
+
+    ``tree`` is None when the file does not parse — the engine reports
+    that as an unsuppressable ``RPL000`` finding instead of crashing.
+    """
+
+    def __init__(self, path: str, text: str):
+        self.path = Path(path).as_posix()
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree = ast.parse(text)
+        except SyntaxError as e:            # pragma: no cover - defensive
+            self.parse_error = e
+        self.suppressions: dict[int, set[str]] = {}
+        for lineno, line in enumerate(self.lines, 1):
+            m = _SUPPRESS.search(line)
+            if m:
+                self.suppressions[lineno] = {
+                    tok.strip() for tok in m.group(1).split(",") if tok.strip()}
+
+    def suppressed(self, line: int, rule_id: str, rule_name: str) -> bool:
+        toks = self.suppressions.get(line)
+        return bool(toks) and bool(toks & {rule_id, rule_name, "all"})
+
+
+class Project:
+    """All scanned files + lazy access to sibling files a rule needs even
+    when they were not part of the scanned path set (e.g. the kernel
+    routing rule reads ``ops.py`` next to the kernel module)."""
+
+    def __init__(self, contexts: list[FileContext], allow_disk: bool = True):
+        self.contexts = contexts
+        self.allow_disk = allow_disk
+        self._by_path = {c.path: c for c in contexts}
+
+    def sibling(self, ctx: FileContext, name: str) -> Optional[FileContext]:
+        """The FileContext for ``name`` in ``ctx``'s directory — from the
+        scanned set if present, else loaded from disk (disabled for
+        in-memory fixture projects), else None."""
+        want = (Path(ctx.path).parent / name).as_posix()
+        got = self._by_path.get(want)
+        if got is not None:
+            return got
+        if not self.allow_disk:
+            return None
+        p = Path(want)
+        if p.is_file():
+            c = FileContext(want, p.read_text())
+            self._by_path[want] = c
+            return c
+        return None
+
+
+class Rule:
+    """Base rule: subclasses set ``id``/``name``/``description`` and
+    implement ``check(ctx, project) -> Iterator[Finding]``."""
+    id = "RPL000"
+    name = "base"
+    description = ""
+
+    def check(self, ctx: FileContext,
+              project: Project) -> Iterator[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(self.id, self.name, ctx.path,
+                       getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message)
+
+
+# ----------------------------------------------------------------------
+# helpers shared by rules
+# ----------------------------------------------------------------------
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """The last dotted component of a Name/Attribute chain:
+    ``cfg`` -> "cfg"; ``self.t.tc`` -> "tc"; ``jax.jit`` -> "jit"."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    return node.value if (isinstance(node, ast.Constant)
+                          and isinstance(node.value, str)) else None
+
+
+# ----------------------------------------------------------------------
+# runner
+# ----------------------------------------------------------------------
+def _select(rules, only: Optional[Iterable[str]]):
+    if not only:
+        return list(rules)
+    keys = set(only)
+    picked = [r for r in rules if r.id in keys or r.name in keys]
+    unknown = keys - {k for r in rules for k in (r.id, r.name)}
+    if unknown:
+        raise ValueError(f"unknown rule(s): {sorted(unknown)}")
+    return picked
+
+
+def run_rules(project: Project, rules,
+              only: Optional[Iterable[str]] = None) -> list[Finding]:
+    picked = _select(rules, only)
+    out: list[Finding] = []
+    for ctx in project.contexts:
+        if ctx.parse_error is not None:
+            out.append(Finding(
+                "RPL000", "parse-error", ctx.path,
+                ctx.parse_error.lineno or 1, 0,
+                f"file does not parse: {ctx.parse_error.msg}"))
+            continue
+        for rule in picked:
+            for f in rule.check(ctx, project):
+                if not ctx.suppressed(f.line, f.rule, f.name):
+                    out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if "__pycache__" not in f.parts:
+                    yield f
+        elif p.is_file() and p.suffix == ".py":
+            yield p
+        else:
+            raise FileNotFoundError(
+                f"reprolint: not a directory or python file: {p}")
+
+
+def lint_paths(paths: Iterable[str], rules=None,
+               only: Optional[Iterable[str]] = None) -> list[Finding]:
+    """Lint files/directories on disk; returns sorted findings."""
+    if rules is None:
+        from .rules import ALL_RULES as rules
+    ctxs = [FileContext(str(f), f.read_text()) for f in iter_py_files(paths)]
+    return run_rules(Project(ctxs), rules, only)
+
+
+def lint_sources(sources: dict[str, str], rules=None,
+                 only: Optional[Iterable[str]] = None) -> list[Finding]:
+    """Lint in-memory sources keyed by (fake) path — the fixture-test
+    entry point: paths control file-scoped rule applicability, and
+    sibling lookups (kernels/ops.py) resolve inside the dict."""
+    if rules is None:
+        from .rules import ALL_RULES as rules
+    ctxs = [FileContext(p, s) for p, s in sources.items()]
+    return run_rules(Project(ctxs, allow_disk=False), rules, only)
+
+
+def lint_source(source: str, path: str = "snippet.py", rules=None,
+                only: Optional[Iterable[str]] = None) -> list[Finding]:
+    """Lint one in-memory source string."""
+    return lint_sources({path: source}, rules, only)
+
+
+def render_text(findings: list[Finding], files: int) -> str:
+    lines = [f.format() for f in findings]
+    lines.append(f"reprolint: {files} files, {len(findings)} findings")
+    return "\n".join(lines)
+
+
+def render_json(findings: list[Finding], files: int) -> str:
+    by_rule: dict[str, int] = {}
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    return json.dumps({
+        "files": files,
+        "findings": [f.to_json() for f in findings],
+        "by_rule": by_rule,
+    }, indent=2, sort_keys=True)

@@ -1,0 +1,26 @@
+"""Rule registry — ALL_RULES is the default rule set for every entry
+point (CLI, lint_paths, lint_sources)."""
+from __future__ import annotations
+
+from .deprecations import (GreedyGenerateRule, LegacyInitCacheRule,
+                           PythonpathRunlineRule)
+from .dispatch import ServeDispatchRule, TrainDispatchRule
+from .donation import DonatedBufferReuseRule
+from .kernels import KernelRoutedRule, KernelVjpRule, SilentFallbackRule
+from .trace import HostSyncInTraceRule, NondetInTraceRule
+
+ALL_RULES = [
+    TrainDispatchRule(),        # RPL101 dispatch-train
+    ServeDispatchRule(),        # RPL102 dispatch-serve
+    HostSyncInTraceRule(),      # RPL201 host-sync-in-trace
+    NondetInTraceRule(),        # RPL202 nondet-in-trace
+    KernelVjpRule(),            # RPL301 kernel-vjp
+    SilentFallbackRule(),       # RPL302 silent-fallback
+    KernelRoutedRule(),         # RPL303 kernel-unrouted
+    GreedyGenerateRule(),       # RPL401 greedy-generate
+    LegacyInitCacheRule(),      # RPL402 legacy-init-cache
+    PythonpathRunlineRule(),    # RPL403 pythonpath-runline
+    DonatedBufferReuseRule(),   # RPL501 donated-buffer-reuse
+]
+
+__all__ = ["ALL_RULES"]

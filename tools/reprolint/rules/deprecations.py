@@ -1,0 +1,124 @@
+"""Deprecation-ban rules (RPL401/RPL402/RPL403).
+
+Deprecated surfaces stay importable for one release with a warning shim;
+these rules stop NEW call sites from creeping in while the shim exists:
+
+* RPL401 ``greedy-generate``: ``greedy_generate`` was replaced by the
+  serve engine (``resolve_serve_engine(...).run(...)``); only the
+  compatibility shim in ``launch/serve.py`` may reference it.
+* RPL402 ``legacy-init-cache``: ``init_cache`` takes ``(batch, max_len,
+  cfg=...)``; the legacy cfg-first positional order is shimmed with a
+  DeprecationWarning and must not gain callers — including the
+  ``getattr(lm, "init_cache")(cfg, ...)`` spelling that dodges greps.
+* RPL403 ``pythonpath-runline``: module docstrings must not advertise
+  ``PYTHONPATH=src python ...`` run-lines — the package is pip-installed
+  (``pip install -e .``); stale run-lines in docs rot silently because
+  nothing executes them.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from ..engine import Rule, const_str, terminal_name
+
+_PYTHONPATH_RUNLINE = re.compile(r"PYTHONPATH=src\s+python")
+
+
+class GreedyGenerateRule(Rule):
+    """No new greedy_generate call sites or imports outside the shim."""
+    id = "RPL401"
+    name = "greedy-generate"
+    description = ("greedy_generate is deprecated — use "
+                   "resolve_serve_engine(...).run(...); only the "
+                   "launch/serve.py shim may reference it")
+    allowed_suffix = "repro/launch/serve.py"
+
+    def check(self, ctx, project):
+        if ctx.path.endswith(self.allowed_suffix):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Name, ast.Attribute)) and \
+                    terminal_name(node) == "greedy_generate":
+                yield self.finding(
+                    ctx, node,
+                    "references deprecated `greedy_generate` — use "
+                    "`resolve_serve_engine(cfg).run(...)` (the serve "
+                    "engine's one-call path)")
+            elif isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.name == "greedy_generate":
+                        yield self.finding(
+                            ctx, node,
+                            "imports deprecated `greedy_generate` — import "
+                            "`resolve_serve_engine` instead")
+
+
+class LegacyInitCacheRule(Rule):
+    """No new cfg-first init_cache callers while the shim exists."""
+    id = "RPL402"
+    name = "legacy-init-cache"
+    description = ("init_cache(cfg, ...) legacy argument order is "
+                   "deprecated — call init_cache(batch, max_len, cfg=cfg)")
+    cfg_names = frozenset({"cfg", "config", "model_cfg", "model_config"})
+    allowed_suffix = "repro/models/lm.py"
+
+    def _callee_is_init_cache(self, func: ast.AST) -> bool:
+        if terminal_name(func) == "init_cache":
+            return True
+        # getattr(lm, "init_cache") — the grep-evading spelling
+        return (isinstance(func, ast.Call)
+                and terminal_name(func.func) == "getattr"
+                and len(func.args) >= 2
+                and const_str(func.args[1]) == "init_cache")
+
+    def check(self, ctx, project):
+        if ctx.path.endswith(self.allowed_suffix):
+            return
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and self._callee_is_init_cache(node.func)
+                    and node.args):
+                continue
+            if terminal_name(node.args[0]) in self.cfg_names:
+                yield self.finding(
+                    ctx, node,
+                    "calls init_cache with the legacy cfg-first argument "
+                    "order (shimmed with a DeprecationWarning) — use "
+                    "`init_cache(batch, max_len, cfg=cfg)`")
+
+
+class PythonpathRunlineRule(Rule):
+    """Module docstrings must not advertise PYTHONPATH=src run-lines."""
+    id = "RPL403"
+    name = "pythonpath-runline"
+    description = ("docstring run-lines must not use `PYTHONPATH=src "
+                   "python ...` — the package is installed (pip install "
+                   "-e .)")
+
+    def check(self, ctx, project):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.Module, ast.ClassDef,
+                                     ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            body = getattr(node, "body", [])
+            if not (body and isinstance(body[0], ast.Expr)
+                    and const_str(body[0].value) is not None):
+                continue
+            doc_node = body[0].value
+            # anchor the finding on the offending physical line: the
+            # literal's lineno is its opening line, and the docstring's
+            # Nth content line sits N lines below it (content starting on
+            # the opening line has a leading segment at offset 0)
+            start = doc_node.lineno
+            for offset, text in enumerate(doc_node.value.splitlines()):
+                if _PYTHONPATH_RUNLINE.search(text):
+                    anchor = ast.Constant(value=None)
+                    anchor.lineno = start + offset
+                    anchor.col_offset = 0
+                    yield self.finding(
+                        ctx, anchor,
+                        "docstring advertises a `PYTHONPATH=src python ...` "
+                        "run-line — the package installs with `pip install "
+                        "-e .`; document the bare `python -m ...` "
+                        "invocation")

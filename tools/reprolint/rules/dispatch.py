@@ -1,0 +1,85 @@
+"""Single-decision-point rules (RPL101/RPL102).
+
+``resolve_engine`` (src/repro/core/engine.py) is the ONLY place allowed
+to read the TrainConfig substrate-dispatch fields (``fused_outer``,
+``device_outer``, ``mesh_name``), and ``resolve_serve_engine``
+(src/repro/serving/engine.py) the only place allowed to read the
+ServeConfig dispatch fields (``batching``, ``timing``).  Everyone else
+receives a resolved EnginePlan/ServePlan.
+
+These rules replace the raw-source regex checks that used to live in
+tests/test_engine.py and tests/test_serve.py: attribute access is
+detected on the AST (no false hits inside strings or comments, and
+multi-line/aliased receivers still match), and ``getattr(cfg,
+"fused_outer")`` — invisible to the regex — is caught too.
+
+A read is attributed to a config object by the RECEIVER name: the last
+dotted component of the receiver chain must look like a config binding
+(``cfg``, ``tc``, ``self.t.tc``, ``serve_cfg``...).  Constructor
+keywords (``TrainConfig(fused_outer=True)``) and reads off clearly
+non-config objects (``args.batching``, ``eng.batching``,
+``plan.batching``) do not flag — the same receiver discipline the
+migrated regex tests enforced.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import Rule, const_str, terminal_name
+
+
+class _DispatchFieldRule(Rule):
+    fields: frozenset = frozenset()
+    receivers: frozenset = frozenset()
+    allowed_suffix = ""
+    decision_point = ""
+
+    def check(self, ctx, project):
+        if ctx.path.endswith(self.allowed_suffix):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) and node.attr in self.fields:
+                if terminal_name(node.value) in self.receivers:
+                    yield self.finding(
+                        ctx, node,
+                        f"reads dispatch field `.{node.attr}` off a config "
+                        f"object — only {self.decision_point} may inspect "
+                        "it; accept a resolved plan instead")
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Name)
+                  and node.func.id == "getattr" and len(node.args) >= 2):
+                field = const_str(node.args[1])
+                if (field in self.fields
+                        and terminal_name(node.args[0]) in self.receivers):
+                    yield self.finding(
+                        ctx, node,
+                        f"getattr-reads dispatch field {field!r} off a "
+                        f"config object — only {self.decision_point} may "
+                        "inspect it")
+
+
+class TrainDispatchRule(_DispatchFieldRule):
+    """No module but core/engine.py reads the TrainConfig substrate flags."""
+    id = "RPL101"
+    name = "dispatch-train"
+    description = ("fused_outer/device_outer/mesh_name may only be read by "
+                   "resolve_engine (src/repro/core/engine.py)")
+    fields = frozenset({"fused_outer", "device_outer", "mesh_name"})
+    receivers = frozenset({"tc", "cfg", "config", "train_cfg",
+                           "train_config"})
+    allowed_suffix = "repro/core/engine.py"
+    decision_point = "engine.resolve_engine"
+
+
+class ServeDispatchRule(_DispatchFieldRule):
+    """No module but serving/engine.py reads the ServeConfig dispatch
+    fields."""
+    id = "RPL102"
+    name = "dispatch-serve"
+    description = ("batching/timing may only be read by "
+                   "resolve_serve_engine (src/repro/serving/engine.py)")
+    fields = frozenset({"batching", "timing"})
+    receivers = frozenset({"sc", "serve", "serve_cfg", "serve_config",
+                           "cfg", "config"})
+    allowed_suffix = "repro/serving/engine.py"
+    decision_point = "serving.engine.resolve_serve_engine"

@@ -1,0 +1,220 @@
+"""Donation-safety rule (RPL501).
+
+``jax.jit(..., donate_argnums=...)`` hands the donated argument's device
+buffer back to XLA — after the call the old array is logically dead, and
+touching it raises (or, on backends without donation, silently aliases).
+The engines donate the carried (params, opt_state) every round, so a
+reuse bug here corrupts training state.
+
+RPL501 ``donated-buffer-reuse`` tracks, per function suite:
+
+* jitted bindings with a literal ``donate_argnums``
+  (``f = jax.jit(step, donate_argnums=(0, 1))`` and the decorator form
+  ``@partial(jax.jit, donate_argnums=(0,))``), and
+* each call through such a binding whose donated positional argument is
+  a bare ``Name``.
+
+A later statement in the same suite that reads the donated name flags —
+unless the name was rebound first (assignment, aug-assign, for-target,
+with-target).  The idiomatic fix IS the rebind: ``params, opt =
+step(params, opt)``.  The analysis is suite-local and name-based on
+purpose (no heap model): cross-function flows and attribute receivers
+are out of scope, which keeps the rule's false-positive rate near zero.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..engine import Rule, terminal_name
+
+
+def _literal_argnums(call: ast.Call) -> Optional[tuple[int, ...]]:
+    """The donate_argnums literal of a jit/pjit call, or None."""
+    if terminal_name(call.func) not in ("jit", "pjit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, int)
+                    for e in v.elts):
+                return tuple(e.value for e in v.elts)
+            return None
+    return None
+
+
+def _find_jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """The jit(...) call inside possibly-nested wrapping, e.g.
+    ``jax.jit(jax.vmap(f), donate_argnums=(0,))``."""
+    if isinstance(node, ast.Call):
+        if _literal_argnums(node) is not None:
+            return node
+        for a in node.args:
+            got = _find_jit_call(a)
+            if got is not None:
+                return got
+    return None
+
+
+class _DonatingBindings(ast.NodeVisitor):
+    """Maps names (``self._fused_round``, ``step``) to donated argnums."""
+
+    def __init__(self):
+        self.bindings: dict[str, tuple[int, ...]] = {}
+
+    def visit_Assign(self, node: ast.Assign):
+        jit = _find_jit_call(node.value)
+        if jit is not None and len(node.targets) == 1:
+            tn = terminal_name(node.targets[0])
+            if tn:
+                self.bindings[tn] = _literal_argnums(jit)
+        self.generic_visit(node)
+
+    def _visit_def(self, node):
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call):
+                nums = _literal_argnums(dec)
+                if nums is None and terminal_name(dec.func) == "partial" \
+                        and dec.args:
+                    inner = ast.Call(func=dec.args[0], args=[],
+                                     keywords=dec.keywords)
+                    nums = _literal_argnums(inner)
+                if nums is not None:
+                    self.bindings[node.name] = nums
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+
+def _bound_names(target: ast.AST) -> Iterator[str]:
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name):
+            yield n.id
+
+
+def _own_walk(stmt: ast.AST):
+    """``stmt``'s subtree excluding nested scopes (function/class/lambda
+    bodies) — each nested function body is dataflow-scanned as its own
+    suite, so donations and reads must not leak across scopes."""
+    yield stmt
+    todo = list(ast.iter_child_nodes(stmt))
+    while todo:
+        n = todo.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef, ast.Lambda)):
+            continue
+        yield n
+        todo.extend(ast.iter_child_nodes(n))
+
+
+def _stmt_rebinds(stmt: ast.stmt) -> set[str]:
+    """Names (re)bound anywhere in the statement's own scope — for a
+    compound statement (for/if/with) that includes bindings in its
+    nested suites, so a loop-body ``params, opt = run(params, opt)``
+    counts as rebinding at the enclosing-suite granularity."""
+    out: set[str] = set()
+    for n in _own_walk(stmt):
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                out.update(_bound_names(t))
+        elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+            out.update(_bound_names(n.target))
+        elif isinstance(n, (ast.For, ast.AsyncFor)):
+            out.update(_bound_names(n.target))
+        elif isinstance(n, (ast.With, ast.AsyncWith)):
+            for item in n.items:
+                if item.optional_vars is not None:
+                    out.update(_bound_names(item.optional_vars))
+    return out
+
+
+def _stmt_reads(stmt: ast.stmt) -> dict[str, ast.Name]:
+    """First Load-context Name node per id in the statement's own scope."""
+    out: dict[str, ast.Name] = {}
+    for n in _own_walk(stmt):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                and n.id not in out:
+            out[n.id] = n
+    return out
+
+
+class DonatedBufferReuseRule(Rule):
+    """A donated argument must not be read again after the donating call
+    in the same suite (rebind it from the call's result instead)."""
+    id = "RPL501"
+    name = "donated-buffer-reuse"
+    description = ("an argument donated via donate_argnums is dead after "
+                   "the call — rebind it from the result before reuse")
+
+    def check(self, ctx, project):
+        binder = _DonatingBindings()
+        binder.visit(ctx.tree)
+        if not binder.bindings:
+            return
+        for node in ast.walk(ctx.tree):
+            body = getattr(node, "body", None)
+            if isinstance(body, list):
+                yield from self._scan_suite(ctx, binder.bindings, body)
+            for attr in ("orelse", "finalbody"):
+                suite = getattr(node, attr, None)
+                if isinstance(suite, list) and suite:
+                    yield from self._scan_suite(ctx, binder.bindings, suite)
+
+    def _scan_suite(self, ctx, bindings, suite):
+        if not all(isinstance(s, ast.stmt) for s in suite):
+            return
+        # donated-name -> the call statement's lineno, for the message
+        dead: dict[str, int] = {}
+        for stmt in suite:
+            # a def/class statement opens its own scope — its body is
+            # scanned as its own suite; here it only rebinds its name
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                dead.pop(stmt.name, None)
+                continue
+            # reads of currently-dead names flag before this statement's
+            # own rebinds resurrect them (`x = f(x)` after donating x is
+            # itself a reuse of the dead x)
+            for name, node in _stmt_reads(stmt).items():
+                if name in dead and not self._is_donating_call_arg(
+                        stmt, bindings, name):
+                    yield self.finding(
+                        ctx, node,
+                        f"`{name}` was donated to a jitted call on line "
+                        f"{dead[name]} (donate_argnums) — its buffer is "
+                        "dead; rebind it from the call's result before "
+                        "reusing it")
+                    del dead[name]      # one finding per donation
+            for call in _own_walk(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                nums = bindings.get(terminal_name(call.func) or "")
+                if not nums:
+                    continue
+                for i in nums:
+                    if i < len(call.args) and \
+                            isinstance(call.args[i], ast.Name):
+                        dead[call.args[i].id] = call.lineno
+            # a name rebound within the donating statement itself holds
+            # the call's RESULT, not the donated buffer — the idiomatic
+            # `params, opt = step(params, opt)` (bare or inside a loop
+            # suite) stays clean:
+            for name in _stmt_rebinds(stmt):
+                dead.pop(name, None)
+
+    @staticmethod
+    def _is_donating_call_arg(stmt, bindings, name) -> bool:
+        """True if every read of ``name`` in this statement is as an
+        argument of a donating call — that read is the donation itself,
+        not a reuse."""
+        for call in _own_walk(stmt):
+            if isinstance(call, ast.Call) and \
+                    bindings.get(terminal_name(call.func) or ""):
+                for a in call.args:
+                    if isinstance(a, ast.Name) and a.id == name:
+                        return True
+        return False

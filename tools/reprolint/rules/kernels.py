@@ -1,0 +1,160 @@
+"""Kernel-contract rules (RPL301/RPL302/RPL303).
+
+docs/KERNELS.md's contracts, machine-checked:
+
+* RPL301 ``kernel-vjp``: a kernel module under ``src/repro/kernels/``
+  that exposes a ``*_pallas`` entry point must register a differentiable
+  backward — a ``jax.custom_vjp`` wiring plus a ``.defvjp(...)`` call —
+  so the entry is a real training path, not forward-only (the
+  conv/pool/dense pattern).  Forward-only kernels awaiting their
+  backward (ROADMAP "LM-family kernels" item) carry an explicit
+  suppression at the entry def, so the debt is visible at the site.
+
+* RPL302 ``silent-fallback``: inside a dispatch function, the
+  ``if impl == "pallas":`` suite must either serve the call (every
+  terminal path returns/raises) or route through the ``_fallback``
+  contract (warn-once + ``fallback_events`` log, raise under explicit
+  ``impl="pallas"``).  Falling off the suite into a bare ``return
+  ref(...)`` tail is the silent-fallback bug class PR 5 closed.
+
+* RPL303 ``kernel-unrouted``: every ``*_pallas`` entry point must be
+  dispatched by the sibling ``ops.py`` — callers go through ``ops`` (the
+  single REPRO_KERNEL_IMPL switch + planner hook), never straight to a
+  kernel module.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from ..engine import Rule, terminal_name
+
+_EXCLUDED = {"ops.py", "ref.py", "__init__.py"}
+
+
+def _is_kernel_module(ctx) -> bool:
+    p = Path(ctx.path)
+    return ("kernels" in p.parts and p.name not in _EXCLUDED
+            and p.suffix == ".py")
+
+
+def _entry_defs(tree: ast.AST) -> list[ast.FunctionDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)
+            and n.name.endswith("_pallas")]
+
+
+def _has_pallas_call(tree: ast.AST) -> bool:
+    return any(isinstance(n, ast.Call)
+               and terminal_name(n.func) == "pallas_call"
+               for n in ast.walk(tree))
+
+
+class KernelVjpRule(Rule):
+    """Every pallas_call entry point pairs with custom_vjp + defvjp."""
+    id = "RPL301"
+    name = "kernel-vjp"
+    description = ("*_pallas entry points in src/repro/kernels/ must "
+                   "register a custom_vjp backward via defvjp")
+
+    def check(self, ctx, project):
+        if not _is_kernel_module(ctx) or not _has_pallas_call(ctx.tree):
+            return
+        has_custom_vjp = False
+        has_defvjp = False
+        for n in ast.walk(ctx.tree):
+            if isinstance(n, ast.Call):
+                tn = terminal_name(n.func)
+                if tn == "defvjp":
+                    has_defvjp = True
+                elif tn == "custom_vjp":
+                    has_custom_vjp = True
+                elif tn == "partial" and n.args and \
+                        terminal_name(n.args[0]) == "custom_vjp":
+                    has_custom_vjp = True
+            elif isinstance(n, (ast.Name, ast.Attribute)) and \
+                    terminal_name(n) == "custom_vjp":
+                has_custom_vjp = True
+        if has_custom_vjp and has_defvjp:
+            return
+        for entry in _entry_defs(ctx.tree):
+            yield self.finding(
+                ctx, entry,
+                f"`{entry.name}` wraps a pallas_call but the module "
+                "registers no custom_vjp+defvjp backward — the kernel is "
+                "forward-only and cannot serve a training path (see "
+                "docs/KERNELS.md)")
+
+
+class KernelRoutedRule(Rule):
+    """Every *_pallas entry point is dispatched by the sibling ops.py."""
+    id = "RPL303"
+    name = "kernel-unrouted"
+    description = ("*_pallas entry points must be called by the sibling "
+                   "ops.py dispatch (the single REPRO_KERNEL_IMPL switch)")
+
+    def check(self, ctx, project):
+        if not _is_kernel_module(ctx):
+            return
+        entries = _entry_defs(ctx.tree)
+        if not entries:
+            return
+        ops = project.sibling(ctx, "ops.py")
+        if ops is None or ops.tree is None:
+            return                  # fixture trees without an ops.py
+        called = {terminal_name(n.func) for n in ast.walk(ops.tree)
+                  if isinstance(n, ast.Call)}
+        for entry in entries:
+            if entry.name not in called:
+                yield self.finding(
+                    ctx, entry,
+                    f"`{entry.name}` is not dispatched by ops.py — kernel "
+                    "entry points must route through the ops layer "
+                    "(REPRO_KERNEL_IMPL switch, planner hook, fallback "
+                    "contract)")
+
+
+def _mentions_impl_pallas(test: ast.AST) -> bool:
+    """True for a test comparing an `impl`-named value to "pallas"."""
+    for n in ast.walk(test):
+        if isinstance(n, ast.Compare):
+            parts = [n.left, *n.comparators]
+            names = {terminal_name(p) for p in parts}
+            consts = {p.value for p in parts
+                      if isinstance(p, ast.Constant)}
+            if "impl" in names and "pallas" in consts:
+                return True
+    return False
+
+
+def _suite_serves_or_falls_back(body: list[ast.stmt]) -> bool:
+    """The pallas suite is honest if it always leaves (return/raise) or
+    it calls the ``_fallback`` contract before falling through."""
+    for stmt in body:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Call) and \
+                    terminal_name(n.func) in ("_fallback", "fallback"):
+                return True
+    last = body[-1]
+    return isinstance(last, (ast.Return, ast.Raise))
+
+
+class SilentFallbackRule(Rule):
+    """A pallas dispatch branch that can fall through to the ref without
+    the ``_fallback`` contract is a silent fallback."""
+    id = "RPL302"
+    name = "silent-fallback"
+    description = ("an `if impl == \"pallas\"` suite must return/raise on "
+                   "every path or invoke the _fallback contract")
+
+    def check(self, ctx, project):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.If) and \
+                    _mentions_impl_pallas(node.test) and \
+                    not _suite_serves_or_falls_back(node.body):
+                yield self.finding(
+                    ctx, node,
+                    "pallas dispatch suite can fall through to the ref "
+                    "silently — return the kernel result on every path or "
+                    "call `_fallback(op, reason, explicit)` so the event "
+                    "is warned and logged in fallback_events()")
