@@ -14,10 +14,16 @@ from repro.data.pipeline import IDPADataset
 from repro.data.synthetic import image_dataset
 from repro.launch.runtime import maybe_enable_compilation_cache
 from repro.models.cnn import CNNConfig, cnn_accuracy, cnn_loss, init_cnn
+from repro.sanitize import compile_budget, install_compile_listener
 
-# REPRO_COMPILATION_CACHE=<dir> lets repeat benchmark runs skip compiles
-# (the measured regions all warm up first, so timings are unaffected)
+# persistent XLA cache, ON by default: repeat benchmark runs skip
+# compiles (REPRO_COMPILATION_CACHE=off opts out; the measured regions
+# all warm up first, so timings are unaffected either way)
 maybe_enable_compilation_cache()
+# compile-event counter: time_call() asserts its measured repeats hit
+# the dispatch cache — a benchmark that recompiles mid-measurement is
+# timing XLA, not the kernel, and must fail loudly
+install_compile_listener()
 
 ROWS = []
 
@@ -37,10 +43,11 @@ def section(title: str):
 
 def time_call(fn, *args, repeats=3):
     fn(*args)                                  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        out = fn(*args)
-    jax.block_until_ready(out)
+    with compile_budget(0, label="time_call measured region"):
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn(*args)
+        jax.block_until_ready(out)
     return (time.perf_counter() - t0) / repeats * 1e6
 
 

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.checkpointing import checkpoint
 from repro.data.pipeline import IDPADataset
+from repro.sanitize import sanctioned_scope, sanctioned_sync
 from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
                                     make_optimizer, warmup_cosine)
 
@@ -217,15 +218,24 @@ class BPTTrainer:
         loss = None
         for _ in range(self.tc.local_steps):
             batch = self.dataset.node_batch(node, self.batch_size, self.rng)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            # one explicit placement for batch + step scalar: the train
+            # step dispatch never uploads implicitly (transfer-guard clean)
+            batch, step_dev = jax.device_put((batch, np.int32(step)))
             params, opt_state, loss = self._train_step(
-                params, opt_state, batch, jnp.asarray(step, jnp.int32))
-        jax.block_until_ready(loss)
+                params, opt_state, batch, step_dev)
+        # Eq. 8 measurement boundary — a sanctioned sync, not a hidden one
+        loss = float(sanctioned_sync(loss, "local-round.loss"))
         wall = time.perf_counter() - t0
-        return params, opt_state, float(loss), wall * self.speed[node]
+        return params, opt_state, loss, wall * self.speed[node]
 
     def _eval(self, params):
-        return float(self.eval_fn(params)) if self.eval_fn else 0.0
+        # accuracy evals PULL by design (the scalar feeds Eq. 7/10
+        # weighting), and eval_fns are caller-supplied host code — the
+        # whole call is a sanctioned scope under the transfer sanitizer
+        if not self.eval_fn:
+            return 0.0
+        with sanctioned_scope("eval"):
+            return float(self.eval_fn(params))
 
     @staticmethod
     def _node_slice(stacked, node: int):
@@ -245,13 +255,13 @@ class BPTTrainer:
         if self._eval_vmapped is None:       # first use: probe traceability
             try:
                 fn = jax.jit(jax.vmap(self.eval_fn))
-                qs = np.asarray(fn(stacked))
+                qs = sanctioned_sync(fn(stacked), "eval-nodes")
                 self._eval_vmapped = fn
                 return [max(float(q), 1e-3) for q in qs]
             except Exception:
                 self._eval_vmapped = False
         if self._eval_vmapped is not False:
-            qs = np.asarray(self._eval_vmapped(stacked))
+            qs = sanctioned_sync(self._eval_vmapped(stacked), "eval-nodes")
             return [max(float(q), 1e-3) for q in qs]
         return [max(self._eval(self._node_slice(stacked, j)), 1e-3)
                 for j in range(self.m)]

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.mesh import make_mesh, make_nodes_mesh
+from repro.sanitize import sanctioned_sync, sanitized
 
 from .gwu import broadcast_tree, tree_sub
 from .param_server import ParameterServer
@@ -252,7 +253,13 @@ class OuterEngine:
                state: Any = None) -> Iterator[RoundEvent]:
         state = self.setup(rounds) if state is None else state
         for r in range(start, self.total_events(rounds)):
-            yield self.run_round(state, r)
+            # the round body runs under the transfer-guard sanitizer
+            # (REPRO_SANITIZE=1): implicit host<->device transfers raise;
+            # the event is yielded OUTSIDE the scope so consumers
+            # (eval / checkpoint hooks) may pull freely
+            with sanitized(f"{self.backend}.run_round"):
+                ev = self.run_round(state, r)
+            yield ev
 
     def snapshot(self, state):
         """``(arrays, scalars)`` capturing the resumable train state, or
@@ -301,25 +308,29 @@ class ScanEngine(OuterEngine):
         return arrays, {"clock": st.clock}
 
     def restore_snapshot(self, st, arrays, scalars):
-        st.params = arrays["params"]
-        st.opt_state = arrays["opt"]
+        # checkpoints restore as numpy trees: commit them explicitly so
+        # the next dispatch is transfer-free under the sanitizer
+        st.params, st.opt_state = jax.device_put(
+            (arrays["params"], arrays["opt"]))
         st.clock = float(scalars["clock"])
 
     def run_round(self, st, r):
         t = self.t
         batches = [t.dataset.node_batch(0, t.batch_size, t.rng)
                    for _ in range(t.tc.local_steps)]
-        stacked = {k: jnp.stack([b[k] for b in batches])
-                   for k in batches[0]}
+        # stack on host, then ONE explicit placement — the jit dispatch
+        # below never uploads implicitly (transfer-guard clean)
+        stacked = jax.device_put({k: np.stack([b[k] for b in batches])
+                                  for k in batches[0]})
         # same contract as the stacked engines: the clock starts after the
         # host batch draw, so the virtual time is compute-only
         t0 = time.perf_counter()
         st.params, st.opt_state, loss = t._scan_round(
-            st.params, st.opt_state, stacked, jnp.asarray(r, jnp.int32))
-        jax.block_until_ready(loss)
+            st.params, st.opt_state, stacked, jax.device_put(np.int32(r)))
+        loss = float(sanctioned_sync(loss, "scan.loss"))
         st.clock += (time.perf_counter() - t0) * t.speed[0]
-        return RoundEvent(round=r, node_losses=np.asarray([float(loss)]),
-                          loss=float(loss), virtual_clock=st.clock,
+        return RoundEvent(round=r, node_losses=np.asarray([loss]),
+                          loss=loss, virtual_clock=st.clock,
                           sync_wait=0.0, comm_bytes=0, params=st.params)
 
 
@@ -367,7 +378,9 @@ class _StackedSGWUEngine(OuterEngine):
             g = jax.device_put(g, jax.sharding.NamedSharding(mesh, P()))
             opt = jax.device_put(
                 opt, jax.sharding.NamedSharding(mesh, P("nodes")))
-        st.server.global_weights = g
+        else:                      # commit the numpy checkpoint trees so
+            g, opt = jax.device_put((g, opt))   # dispatches stay implicit-
+        st.server.global_weights = g            # transfer-free (sanitizer)
         st.server.load_state_dict(scalars["server"])
         st.stacked_opt = opt
         st.clock = float(scalars["clock"])
@@ -387,15 +400,19 @@ class _StackedSGWUEngine(OuterEngine):
         batches = t.dataset.stacked_round_batches(
             t.batch_size, t.tc.local_steps, t.rng,
             uneven=t.tc.uneven_batches)
-        if st.batch_sharding is not None:
-            batches = jax.device_put(batches, st.batch_sharding)
+        # explicit placement even on the fused single-device path
+        # (batch_sharding None -> default device): the round dispatch
+        # below must never upload the host batches implicitly
+        batches = jax.device_put(batches, st.batch_sharding)
         # the Eq. 8 wall starts AFTER the host batch draw + device
         # placement: data prep is the main server's work, not node compute,
         # and must not pollute the sync-wait or the IDPA duration feedback
         t0 = time.perf_counter()
         stacked_w, st.stacked_opt, node_losses = st.round_fn(
-            stacked_w, st.stacked_opt, batches, jnp.asarray(r, jnp.int32))
-        node_losses = np.asarray(jax.block_until_ready(node_losses))
+            stacked_w, st.stacked_opt, batches, jax.device_put(np.int32(r)))
+        # the Eq. 8 measurement boundary: blocking here IS the wall
+        # semantics, so the pull is a sanctioned sync, not a hidden one
+        node_losses = sanctioned_sync(node_losses, "round.losses")
         wall = time.perf_counter() - t0
         # a dead node's lane still computes (the fused dispatch is
         # all-or-nothing) but its result never reaches the barrier: its
@@ -529,9 +546,10 @@ class SequentialEngine(OuterEngine):
         return arrays, scalars
 
     def restore_snapshot(self, st, arrays, scalars):
-        st.server.global_weights = arrays["global"]
+        # commit the numpy checkpoint trees (sanitizer: no implicit h2d)
+        st.server.global_weights = jax.device_put(arrays["global"])
         st.server.load_state_dict(scalars["server"])
-        st.opt_states = [arrays["opt"][str(j)]
+        st.opt_states = [jax.device_put(arrays["opt"][str(j)])
                          for j in range(len(st.opt_states))]
         st.clock = float(scalars["clock"])
         st.sync_wait = float(scalars["sync_wait"])
@@ -745,7 +763,8 @@ class HeapEngine(OuterEngine):
                 # permanent failures: the dead nodes' rounds never run;
                 # the surviving nodes have completed all of theirs
                 return
-            ev = self._process(st, i)
+            with sanitized(f"{self.backend}.push"):
+                ev = self._process(st, i)
             if ev is None:
                 continue                    # dropped (lost) push
             yield ev
@@ -777,7 +796,8 @@ class HeapEngine(OuterEngine):
 
     def restore_snapshot(self, st, arrays, scalars):
         t = self.t
-        st.server.global_weights = arrays["global"]
+        # commit the numpy checkpoint trees (sanitizer: no implicit h2d)
+        st.server.global_weights = jax.device_put(arrays["global"])
         st.server.load_state_dict(scalars["server"])
         for j in range(t.m):
             local, opt = arrays["local"][str(j)], arrays["opt"][str(j)]
@@ -788,6 +808,7 @@ class HeapEngine(OuterEngine):
                 base = jax.device_put(base, self.plan.devices[j])
                 st.base_local[j] = base
             else:
+                local, opt, base = jax.device_put((local, opt, base))
                 st.server._base[j] = base
             st.local[j] = local
             st.opt_states[j] = opt

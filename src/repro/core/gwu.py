@@ -12,6 +12,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["sgwu_merge", "sgwu_merge_stacked", "sgwu_merge_and_rebroadcast",
            "sgwu_merge_and_rebroadcast_sharded", "broadcast_tree",
@@ -50,13 +51,24 @@ def _merge_and_rebroadcast(stacked, weights):
     return merged, new_stacked
 
 
-def _merge_weights(accuracies, num_nodes: int):
-    """Eq. (7) weighting Q_j / sum_k Q_k, with the all-zero guard."""
-    q = jnp.asarray(accuracies, dtype=jnp.float32)
+@functools.partial(jax.jit, static_argnums=(1,))
+def _merge_weights_jit(q, num_nodes: int):
     total = jnp.sum(q)
     # guard: all-zero accuracies degrade to the uniform average
     return jnp.where(total > 0, q / jnp.maximum(total, 1e-12),
                      jnp.full_like(q, 1.0 / num_nodes))
+
+
+def _merge_weights(accuracies, num_nodes: int):
+    """Eq. (7) weighting Q_j / sum_k Q_k, with the all-zero guard.
+
+    Host accuracies are placed explicitly and the arithmetic runs under
+    jit, where the scalar guards are trace-time constants — eager ops
+    mixing device arrays with python scalars would upload the scalars
+    implicitly and trip the sanitizer's transfer guard.
+    """
+    q = jax.device_put(np.asarray(accuracies, dtype=np.float32))
+    return _merge_weights_jit(q, num_nodes)
 
 
 def _validate_stack(stacked, accuracies) -> int:
@@ -223,7 +235,7 @@ def agwu_update_delta(global_weights, delta, gamma: float, accuracy: float):
     same float ops (and therefore bit-identical results) as
     ``agwu_update``, split at the subtraction.
     """
-    scale = jnp.asarray(gamma * accuracy, dtype=jnp.float32)
+    scale = jax.device_put(np.float32(gamma * accuracy))
     return _agwu_apply_delta(global_weights, delta, scale)
 
 
@@ -235,7 +247,9 @@ def agwu_update(global_weights, local_weights, base_weights,
     ``donate_local=True`` the caller hands over ``local_weights``' buffers
     (the ParameterServer push path does).
     """
-    scale = jnp.asarray(gamma * accuracy, dtype=jnp.float32)
+    # explicit placement: jnp.asarray of a host scalar dispatches an
+    # implicit upload and would trip the sanitizer's transfer guard
+    scale = jax.device_put(np.float32(gamma * accuracy))
     if donate_local:
         # Donation needs device-committed jax.Arrays (numpy trees from the
         # simulators can't donate and would warn), and XLA rejects donating

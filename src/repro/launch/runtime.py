@@ -1,28 +1,40 @@
 """Process-level runtime knobs shared by drivers and benchmarks.
 
-Currently one knob: the persistent XLA compilation cache.  Setting
-``REPRO_COMPILATION_CACHE=<dir>`` makes repeat runs of the same driver /
-benchmark skip recompiles entirely (the ROADMAP perf-flywheel item) —
-identical HLO hits the on-disk cache instead of XLA.  Off by default:
-tests and one-shot runs keep their hermetic no-cache behavior.
+Currently one knob: the persistent XLA compilation cache (the ROADMAP
+perf-flywheel item).  ON BY DEFAULT for drivers and benchmarks — repeat
+runs of the same driver skip recompiles entirely because identical HLO
+hits the on-disk cache instead of XLA.  ``REPRO_COMPILATION_CACHE``
+overrides: a path relocates the cache, ``off`` (or ``0``) disables it.
+Tests never call ``maybe_enable_compilation_cache``, so the suite keeps
+its hermetic no-cache behavior.
 """
 from __future__ import annotations
 
 import os
 
-__all__ = ["maybe_enable_compilation_cache"]
+__all__ = ["maybe_enable_compilation_cache", "default_cache_dir"]
+
+
+def default_cache_dir() -> str:
+    """XDG-style default cache location (``~/.cache`` unless overridden)."""
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro", "xla")
 
 
 def maybe_enable_compilation_cache() -> str:
-    """Enable jax's persistent compilation cache when the env knob is set.
+    """Enable jax's persistent compilation cache (default ON).
 
-    Returns the cache directory actually enabled ("" when the knob is
-    unset).  Safe to call more than once and before/after other jax work;
-    the directory is created if missing.
+    Returns the cache directory actually enabled — the
+    ``REPRO_COMPILATION_CACHE`` path when set, ``default_cache_dir()``
+    when unset, or "" when the knob is ``off``/``0``.  Safe to call more
+    than once and before/after other jax work; the directory is created
+    if missing.
     """
-    path = os.environ.get("REPRO_COMPILATION_CACHE", "")
-    if not path:
+    knob = os.environ.get("REPRO_COMPILATION_CACHE", "")
+    if knob.lower() in ("off", "0"):
         return ""
+    path = knob or default_cache_dir()
     from jax.experimental.compilation_cache import compilation_cache as cc
     os.makedirs(path, exist_ok=True)
     if hasattr(cc, "set_cache_dir"):

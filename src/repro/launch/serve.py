@@ -18,6 +18,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.launch import runtime
 from repro.serving import ServeConfig, make_serve_engine, poisson_requests
 
 
@@ -50,6 +51,12 @@ def main(argv=None):
                     choices=["measured", "model"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # persistent XLA cache (default on): repeat serve runs skip the
+    # prefill/decode compiles entirely (REPRO_COMPILATION_CACHE=off opts out)
+    cache_dir = runtime.maybe_enable_compilation_cache()
+    if cache_dir:
+        print(f"[serve] compilation cache: {cache_dir}")
 
     cfg = configs.get_reduced(args.arch)
     # params and prompt stream draw from SPLIT keys (the old demo reused

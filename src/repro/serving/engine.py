@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.sanitize import sanctioned_scope
 
 from .scheduler import Request, SlotAllocator
 
@@ -104,13 +105,18 @@ class ServeEvent:
 # timers: the virtual clock's duration source
 # ----------------------------------------------------------------------
 class MeasuredTimer:
-    """Advance the clock by measured wall time (block_until_ready)."""
+    """Advance the clock by measured wall time (block_until_ready).
+
+    The block is the measurement, so it routes through the sanitizer's
+    ``sanctioned_scope`` — the runtime twin of this class's entry on the
+    RPL201/202 ``TIMER_ALLOWLIST``."""
     source = "measured"
 
     def call(self, kind: str, units: float, fn, *args):
         t0 = time.perf_counter()
         out = fn(*args)
-        jax.block_until_ready(out)
+        with sanctioned_scope(f"measured-timer.{kind}"):
+            jax.block_until_ready(out)
         return out, (time.perf_counter() - t0) * 1e3
 
 

@@ -465,6 +465,267 @@ class TestEngineBehaviour:
 
 
 # ----------------------------------------------------------------------
+# RPL601–RPL605 — shardcheck: mesh/collective static analysis
+# ----------------------------------------------------------------------
+class TestShardcheckRules:
+    def test_axis_unbound_by_enclosing_mesh_flags(self):
+        """psum("model") inside a shard_map over a 1-D `nodes` mesh: the
+        axis exists in the repo vocabulary but is NOT bound here."""
+        out = lint("""
+            import jax
+            from jax.experimental.shard_map import shard_map
+            from repro.launch.mesh import make_nodes_mesh
+            mesh = make_nodes_mesh(4)
+            def body(x):
+                return jax.lax.psum(x, "model")
+            sm = shard_map(body, mesh=mesh, in_specs=None, out_specs=None)
+            """, path="src/repro/core/x.py", only=["RPL601"])
+        assert rules_of(out) == ["RPL601"]
+        assert "'model'" in out[0].message and "nodes" in out[0].message
+
+    def test_axis_bound_by_hybrid_mesh_is_clean(self):
+        out = lint("""
+            import jax
+            from jax.experimental.shard_map import shard_map
+            from repro.launch.mesh import make_hybrid_mesh
+            mesh = make_hybrid_mesh(4, 2)
+            def body(x):
+                i = jax.lax.axis_index("nodes")
+                return jax.lax.psum(x, "model") + i
+            sm = shard_map(body, mesh=mesh, in_specs=None, out_specs=None)
+            """, path="src/repro/core/x.py", only=["RPL601"])
+        assert out == []
+
+    def test_axis_outside_vocabulary_flags_anywhere(self):
+        out = lint("""
+            import jax
+            def f(x):
+                return jax.lax.all_gather(x, "banana")
+            """, path="src/repro/models/y.py", only=["RPL601"])
+        assert rules_of(out) == ["RPL601"]
+        assert "banana" in out[0].message
+
+    def test_named_mesh_resolves_through_registry(self):
+        """make_mesh("hyb") binds (nodes, model) cross-FILE through the
+        MESHES dict in the project's launch/mesh.py."""
+        out = lint_sources({
+            "launch/mesh.py": textwrap.dedent("""
+                MESHES = {
+                    "hyb": ((4, 2), ("nodes", "model")),
+                    "flat": ((8,), ("data",)),
+                }
+                """),
+            "core/x.py": textwrap.dedent("""
+                import jax
+                from jax.experimental.shard_map import shard_map
+                from repro.launch.mesh import make_mesh
+                mesh = make_mesh("hyb")
+                def body(x):
+                    return jax.lax.psum(x, "data")
+                sm = shard_map(body, mesh=mesh, in_specs=None,
+                               out_specs=None)
+                """),
+        }, only=["RPL601"])
+        assert rules_of(out) == ["RPL601"]
+        assert "'data'" in out[0].message and "nodes" in out[0].message
+
+    def test_unresolvable_axis_name_is_skipped(self):
+        """Axis names flowing through parameters (planner idiom
+        ``axis = plan.axis``) are skipped, not guessed."""
+        out = lint("""
+            import jax
+            def combine(loss, axis):
+                return jax.lax.psum(loss, axis)
+            """, path="src/repro/core/x.py", only=["RPL601"])
+        assert out == []
+
+    def test_axis_default_parameter_resolves(self):
+        out = lint("""
+            import jax
+            def f(x, axis_name="bogus"):
+                return jax.lax.psum(x, axis_name)
+            """, path="src/repro/core/x.py", only=["RPL601"])
+        assert rules_of(out) == ["RPL601"]
+
+    def test_eq7_merge_over_model_flags(self):
+        """THE fixture of the PR: a mis-axed Eq. 7 merge — psum over
+        `model` inside the GWU scope merges the wrong groups."""
+        out = lint("""
+            import jax
+            def _sharded_merge_fn(mesh):
+                def body(stack, w):
+                    return jax.lax.psum(stack * w, "model")
+                return body
+            """, path="src/repro/core/gwu.py", only=["RPL602"])
+        assert rules_of(out) == ["RPL602"]
+        assert "'model'" in out[0].message and "nodes" in out[0].message
+
+    def test_eq7_merge_over_nodes_is_clean(self):
+        out = lint("""
+            import jax
+            def sgwu_merge(stack, w):
+                i = jax.lax.axis_index("model")   # index read: not a merge
+                return jax.lax.psum(stack * w, "nodes")
+            """, path="src/repro/core/x.py", only=["RPL602"])
+        assert out == []
+
+    def test_planner_model_psum_is_out_of_eq7_scope(self):
+        out = lint("""
+            import jax
+            def grad_combine_over_model(loss):
+                return jax.lax.psum(loss, "model")
+            """, path="src/repro/core/planner.py", only=["RPL602"])
+        assert out == []
+
+    def test_orphan_spec_outside_owner_flags(self):
+        out = lint("""
+            from jax.sharding import PartitionSpec as P
+            SPEC = P("nodes")
+            """, path="src/repro/core/x.py", only=["RPL603"])
+        assert rules_of(out) == ["RPL603"]
+        assert "planner" in out[0].message
+
+    def test_spec_in_owner_module_is_clean(self):
+        out = lint("""
+            from jax.sharding import PartitionSpec as P
+            SPEC = P("nodes")
+            """, path="src/repro/core/planner.py", only=["RPL603"])
+        assert out == []
+
+    def test_spec_shipped_with_mesh_op_is_clean(self):
+        out = lint("""
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            def place(x, mesh):
+                return jax.device_put(x, NamedSharding(mesh, P("nodes")))
+            """, path="src/repro/core/x.py", only=["RPL603"])
+        assert out == []
+
+    def test_spec_shipped_via_local_name_is_clean(self):
+        """bpt_trainer idiom: batch_spec = P("nodes") referenced by the
+        shard_map in_specs ships the spec."""
+        out = lint("""
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            def build(body, mesh):
+                batch_spec = P("nodes")
+                return shard_map(body, mesh=mesh,
+                                 in_specs=(batch_spec,), out_specs=P())
+            """, path="src/repro/core/x.py", only=["RPL603"])
+        assert out == []
+
+    def test_spec_axis_outside_vocabulary_flags(self):
+        out = lint("""
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            def place(mesh):
+                return NamedSharding(mesh, P("bogus"))
+            """, path="src/repro/launch/sharding.py", only=["RPL603"])
+        assert rules_of(out) == ["RPL603"]
+        assert "bogus" in out[0].message
+
+    def test_dynamic_spec_is_skipped(self):
+        out = lint("""
+            from jax.sharding import PartitionSpec as P
+            def spec_for(axes):
+                return P(*axes)
+            EMPTY = P()
+            """, path="src/repro/core/x.py", only=["RPL603"])
+        assert out == []
+
+    def test_unregistered_dataclass_in_traced_code_flags(self):
+        out = lint("""
+            import dataclasses, jax
+            @dataclasses.dataclass
+            class Cache:
+                x: int
+            @jax.jit
+            def step(a):
+                return Cache(a)
+            """, path="src/repro/models/c.py", only=["RPL604"])
+        assert rules_of(out) == ["RPL604"]
+        assert "Cache" in out[0].message
+
+    def test_registered_dataclass_is_clean(self):
+        out = lint("""
+            import dataclasses, jax
+            @dataclasses.dataclass
+            class Cache:
+                x: int
+            jax.tree_util.register_dataclass(Cache)
+            @jax.jit
+            def step(a):
+                return Cache(a)
+            """, path="src/repro/models/c.py", only=["RPL604"])
+        assert out == []
+
+    def test_untraced_dataclass_construction_is_clean(self):
+        out = lint("""
+            import dataclasses
+            @dataclasses.dataclass
+            class Report:
+                x: int
+            def summarize(a):
+                return Report(a)
+            """, path="src/repro/models/c.py", only=["RPL604"])
+        assert out == []
+
+    def test_pallas_in_shardmap_without_check_rep_flags(self):
+        out = lint("""
+            from jax.experimental.shard_map import shard_map
+            from jax.experimental import pallas as pl
+            def body(x):
+                return pl.pallas_call(kern, out_shape=None)(x)
+            sm = shard_map(body, mesh=m, in_specs=None, out_specs=None)
+            """, path="src/repro/models/k.py", only=["RPL605"])
+        assert rules_of(out) == ["RPL605"]
+        assert "check_rep" in out[0].message
+
+    def test_pallas_in_shardmap_with_check_rep_false_is_clean(self):
+        out = lint("""
+            from jax.experimental.shard_map import shard_map
+            from jax.experimental import pallas as pl
+            def body(x):
+                return pl.pallas_call(kern, out_shape=None)(x)
+            sm = shard_map(body, mesh=m, in_specs=None, out_specs=None,
+                           check_rep=False)
+            """, path="src/repro/models/k.py", only=["RPL605"])
+        assert out == []
+
+    def test_pallas_free_shardmap_needs_no_check_rep(self):
+        out = lint("""
+            from jax.experimental.shard_map import shard_map
+            def body(x):
+                return x + 1
+            sm = shard_map(body, mesh=m, in_specs=None, out_specs=None)
+            """, path="src/repro/models/k.py", only=["RPL605"])
+        assert out == []
+
+    def test_fixture_project_without_mesh_module_uses_default_axes(self):
+        """In-memory projects with no launch/mesh.py fall back to the
+        default axis vocabulary instead of crashing or flagging all."""
+        out = lint_sources({"core/a.py": textwrap.dedent("""
+            import jax
+            def f(x):
+                return jax.lax.psum(x, "nodes")
+            """)}, only=["RPL601"])
+        assert out == []
+
+    def test_mesh_module_inside_fixture_project_wins(self):
+        """A fixture project that carries its own launch/mesh.py defines
+        the vocabulary — cross-FILE resolution inside lint_sources."""
+        out = lint_sources({
+            "launch/mesh.py": 'MESHES = {"m": ((2,), ("ring",))}\n',
+            "core/a.py": textwrap.dedent("""
+                import jax
+                def f(x):
+                    return jax.lax.psum(x, "nodes")
+                """),
+        }, only=["RPL601"])
+        assert rules_of(out) == ["RPL601"]
+        assert "ring" in out[0].message
+
+
+# ----------------------------------------------------------------------
 # the repo itself + the CLI
 # ----------------------------------------------------------------------
 class TestRepoIsClean:
@@ -497,3 +758,48 @@ class TestRepoIsClean:
             cwd=REPO, capture_output=True, text=True, timeout=120)
         assert proc.returncode == 0
         assert "0 findings" in proc.stdout
+
+    def test_cli_only_and_disable_flags(self, tmp_path):
+        """--only narrows the rule set, --disable carves rules out of it,
+        and the JSON report carries zero-inclusive per-rule counts for
+        exactly the rules that RAN."""
+        bad = tmp_path / "bad.py"
+        # trips RPL101 (config read) AND RPL601 (bogus collective axis)
+        bad.write_text(
+            "import jax\n"
+            "def f(tc, x):\n"
+            "    if tc.fused_outer:\n"
+            "        return jax.lax.psum(x, 'banana')\n")
+
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.reprolint", str(bad),
+             "--only", "RPL101,RPL601", "--disable", "RPL101",
+             "--format", "json"],
+            cwd=REPO, capture_output=True, text=True, timeout=120)
+        assert proc.returncode == 1
+        payload = json.loads(proc.stdout)
+        assert payload["by_rule"] == {"RPL601": 1}
+        # per-rule counts: RPL601 ran and found; RPL101 was disabled so
+        # it has NO entry (absent != zero)
+        assert payload["rules"] == {
+            "RPL601": {"name": "collective-axis-unbound", "findings": 1}}
+
+        # symbolic names work too, and a disabled-to-clean run exits 0
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.reprolint", str(bad),
+             "--disable", "dispatch-train,collective-axis-unbound",
+             "--format", "json"],
+            cwd=REPO, capture_output=True, text=True, timeout=120)
+        assert proc.returncode == 0
+        payload = json.loads(proc.stdout)
+        assert payload["findings"] == []
+        assert "RPL101" not in payload["rules"]
+        assert payload["rules"]["RPL605"]["findings"] == 0
+
+        # unknown rule names are usage errors (exit 2), not silent no-ops
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.reprolint", str(bad),
+             "--disable", "RPL999"],
+            cwd=REPO, capture_output=True, text=True, timeout=120)
+        assert proc.returncode == 2
+        assert "RPL999" in proc.stderr

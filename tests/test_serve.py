@@ -348,6 +348,68 @@ class TestStreaming:
 
 
 # ----------------------------------------------------------------------
+# compile budgets: prefill-compiles-per-prompt-length (bucketing sentinel)
+# ----------------------------------------------------------------------
+class TestCompileBudgets:
+    """The serve engine's compile economics, pinned.
+
+    Today the prefill jit retraces once per DISTINCT prompt length —
+    the documented budget.  The ROADMAP prompt-length-bucketing item
+    will cut this to one trace per bucket; when it lands, the
+    documented-budget test starts failing (update the expected count)
+    and the strict-xfail test starts XPASS-erroring — both fire, in
+    opposite directions, so the sentinel cannot rot silently.
+    """
+
+    def test_prefill_compiles_once_per_prompt_length(self, dense_setup):
+        cfg, params = dense_setup
+        lens = (6, 10, 14)
+        reqs = poisson_requests(12, rate_rps=800.0, seed=5,
+                                prompt_lens=lens, gen_lens=(4,),
+                                gen_probs=(1.0,),
+                                vocab_size=cfg.vocab_size)
+        eng = make_serve_engine(params, cfg, ServeConfig(
+            slots=4, max_seq=64, timing="model", batching="continuous"))
+        done = [e for e in eng.run(reqs) if e.kind == "complete"]
+        assert len(done) == len(reqs)
+        served = {len(r.tokens) for r in reqs}
+        assert eng.prefill_traces == len(served), (
+            f"prefill traced {eng.prefill_traces}x for {sorted(served)} — "
+            "budget is one trace per distinct prompt length (pre-"
+            "bucketing); if bucketing landed, update this budget")
+
+    @pytest.mark.xfail(
+        strict=True,
+        reason="prompt-length bucketing not implemented: prefill "
+               "retraces per distinct length (ROADMAP item); XPASS "
+               "here means bucketing landed — delete the xfail")
+    def test_prefill_bucketing_single_trace(self, dense_setup):
+        cfg, params = dense_setup
+        reqs = poisson_requests(8, rate_rps=800.0, seed=6,
+                                prompt_lens=(6, 10, 14), gen_lens=(4,),
+                                gen_probs=(1.0,),
+                                vocab_size=cfg.vocab_size)
+        eng = make_serve_engine(params, cfg, ServeConfig(
+            slots=4, max_seq=64, timing="model", batching="continuous"))
+        list(eng.run(reqs))
+        assert eng.prefill_traces == 1
+
+    def test_decode_steady_state_meets_zero_budget(self, dense_setup):
+        """After warmup, the decode loop must dispatch from cache — the
+        compile_budget(0) contract the benchmark harness also pins."""
+        from repro.sanitize import compile_budget
+        cfg, params = dense_setup
+        eng = make_serve_engine(params, cfg, ServeConfig(slots=2,
+                                                         max_seq=32))
+        _, sl, _ = eng.prefill(jnp.zeros((1, 4), jnp.int32))
+        eng.insert(sl, 0)
+        eng.decode(np.zeros((2,), np.int32))       # warmup trace
+        with compile_budget(0, what="traces", label="serve decode"):
+            for _ in range(6):
+                eng.decode(np.zeros((2,), np.int32))
+
+
+# ----------------------------------------------------------------------
 # CLI smoke
 # ----------------------------------------------------------------------
 class TestServeCLI:

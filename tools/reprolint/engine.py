@@ -88,6 +88,7 @@ class Project:
         self.contexts = contexts
         self.allow_disk = allow_disk
         self._by_path = {c.path: c for c in contexts}
+        self._found: dict[str, Optional[FileContext]] = {}
 
     def sibling(self, ctx: FileContext, name: str) -> Optional[FileContext]:
         """The FileContext for ``name`` in ``ctx``'s directory — from the
@@ -105,6 +106,45 @@ class Project:
             self._by_path[want] = c
             return c
         return None
+
+    def find(self, suffix: str) -> Optional[FileContext]:
+        """The FileContext whose path ends with ``suffix`` (posix, e.g.
+        ``"launch/mesh.py"``) — the cross-FILE (not just cross-directory)
+        twin of ``sibling``, used by whole-program rules like the RPL6xx
+        mesh-axis resolution.  Scanned set first; on disk, resolved
+        against every scanned file's ancestor directories (so linting
+        ``tests/`` alone still finds ``src/repro/launch/mesh.py``
+        through the repo root).  None when absent (fixture projects
+        without the module)."""
+        if suffix in self._found:
+            return self._found[suffix]
+        got = None
+        for c in self.contexts:
+            if c.path.endswith(suffix):
+                got = c
+                break
+        if got is None and self.allow_disk:
+            seen = set()
+            for c in self.contexts:
+                for parent in Path(c.path).resolve().parents:
+                    if parent in seen:
+                        continue
+                    seen.add(parent)
+                    # bounded probes, not a glob: the package layout is
+                    # fixed (src/repro/<suffix>), plus the direct join for
+                    # paths already inside the package
+                    for cand in (parent / "src" / "repro" / suffix,
+                                 parent / suffix):
+                        if cand.is_file():
+                            got = FileContext(cand.as_posix(),
+                                              cand.read_text())
+                            break
+                    if got is not None:
+                        break
+                if got is not None:
+                    break
+        self._found[suffix] = got
+        return got
 
 
 class Rule:
@@ -146,20 +186,25 @@ def const_str(node: ast.AST) -> Optional[str]:
 # ----------------------------------------------------------------------
 # runner
 # ----------------------------------------------------------------------
-def _select(rules, only: Optional[Iterable[str]]):
-    if not only:
-        return list(rules)
-    keys = set(only)
-    picked = [r for r in rules if r.id in keys or r.name in keys]
-    unknown = keys - {k for r in rules for k in (r.id, r.name)}
+def _select(rules, only: Optional[Iterable[str]],
+            disable: Optional[Iterable[str]] = None):
+    keys, dkeys = set(only or ()), set(disable or ())
+    unknown = (keys | dkeys) - {k for r in rules for k in (r.id, r.name)}
     if unknown:
         raise ValueError(f"unknown rule(s): {sorted(unknown)}")
+    picked = list(rules)
+    if keys:
+        picked = [r for r in picked if r.id in keys or r.name in keys]
+    if dkeys:
+        picked = [r for r in picked
+                  if r.id not in dkeys and r.name not in dkeys]
     return picked
 
 
 def run_rules(project: Project, rules,
-              only: Optional[Iterable[str]] = None) -> list[Finding]:
-    picked = _select(rules, only)
+              only: Optional[Iterable[str]] = None,
+              disable: Optional[Iterable[str]] = None) -> list[Finding]:
+    picked = _select(rules, only, disable)
     out: list[Finding] = []
     for ctx in project.contexts:
         if ctx.parse_error is not None:
@@ -191,29 +236,32 @@ def iter_py_files(paths: Iterable[str]) -> Iterator[Path]:
 
 
 def lint_paths(paths: Iterable[str], rules=None,
-               only: Optional[Iterable[str]] = None) -> list[Finding]:
+               only: Optional[Iterable[str]] = None,
+               disable: Optional[Iterable[str]] = None) -> list[Finding]:
     """Lint files/directories on disk; returns sorted findings."""
     if rules is None:
         from .rules import ALL_RULES as rules
     ctxs = [FileContext(str(f), f.read_text()) for f in iter_py_files(paths)]
-    return run_rules(Project(ctxs), rules, only)
+    return run_rules(Project(ctxs), rules, only, disable)
 
 
 def lint_sources(sources: dict[str, str], rules=None,
-                 only: Optional[Iterable[str]] = None) -> list[Finding]:
+                 only: Optional[Iterable[str]] = None,
+                 disable: Optional[Iterable[str]] = None) -> list[Finding]:
     """Lint in-memory sources keyed by (fake) path — the fixture-test
     entry point: paths control file-scoped rule applicability, and
     sibling lookups (kernels/ops.py) resolve inside the dict."""
     if rules is None:
         from .rules import ALL_RULES as rules
     ctxs = [FileContext(p, s) for p, s in sources.items()]
-    return run_rules(Project(ctxs, allow_disk=False), rules, only)
+    return run_rules(Project(ctxs, allow_disk=False), rules, only, disable)
 
 
 def lint_source(source: str, path: str = "snippet.py", rules=None,
-                only: Optional[Iterable[str]] = None) -> list[Finding]:
+                only: Optional[Iterable[str]] = None,
+                disable: Optional[Iterable[str]] = None) -> list[Finding]:
     """Lint one in-memory source string."""
-    return lint_sources({path: source}, rules, only)
+    return lint_sources({path: source}, rules, only, disable)
 
 
 def render_text(findings: list[Finding], files: int) -> str:
@@ -222,12 +270,19 @@ def render_text(findings: list[Finding], files: int) -> str:
     return "\n".join(lines)
 
 
-def render_json(findings: list[Finding], files: int) -> str:
+def render_json(findings: list[Finding], files: int, rules=None) -> str:
     by_rule: dict[str, int] = {}
     for f in findings:
         by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
-    return json.dumps({
+    report = {
         "files": files,
         "findings": [f.to_json() for f in findings],
         "by_rule": by_rule,
-    }, indent=2, sort_keys=True)
+    }
+    if rules is not None:
+        # per-rule counts for every rule that RAN (zeroes included), so a
+        # report reader can tell "clean under RPL601" from "never checked"
+        report["rules"] = {r.id: {"name": r.name,
+                                  "findings": by_rule.get(r.id, 0)}
+                           for r in rules}
+    return json.dumps(report, indent=2, sort_keys=True)

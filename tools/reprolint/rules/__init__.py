@@ -7,6 +7,9 @@ from .deprecations import (GreedyGenerateRule, LegacyInitCacheRule,
 from .dispatch import ServeDispatchRule, TrainDispatchRule
 from .donation import DonatedBufferReuseRule
 from .kernels import KernelRoutedRule, KernelVjpRule, SilentFallbackRule
+from .shardcheck import (CollectiveAxisRule, Eq7MergeAxisRule,
+                         PallasInShardMapRule, PartitionSpecHygieneRule,
+                         UnregisteredPytreeRule)
 from .trace import HostSyncInTraceRule, NondetInTraceRule
 
 ALL_RULES = [
@@ -21,6 +24,11 @@ ALL_RULES = [
     LegacyInitCacheRule(),      # RPL402 legacy-init-cache
     PythonpathRunlineRule(),    # RPL403 pythonpath-runline
     DonatedBufferReuseRule(),   # RPL501 donated-buffer-reuse
+    CollectiveAxisRule(),       # RPL601 collective-axis-unbound
+    Eq7MergeAxisRule(),         # RPL602 eq7-merge-axis
+    PartitionSpecHygieneRule(),  # RPL603 partitionspec-hygiene
+    UnregisteredPytreeRule(),   # RPL604 unregistered-pytree
+    PallasInShardMapRule(),     # RPL605 pallas-in-shardmap
 ]
 
 __all__ = ["ALL_RULES"]

@@ -1,0 +1,646 @@
+"""shardcheck: mesh/collective static analysis (RPL601-RPL605).
+
+The paper's bi-layered architecture lives or dies on axis discipline:
+the outer BPT layer all-reduces over ``nodes`` (Eq. 7) while the inner
+per-layer plans collectivize over ``model`` — a collective issued over
+the wrong axis name either crashes at dispatch (unbound name) or, far
+worse, silently merges the wrong groups (bound-but-wrong name on a 2-D
+hybrid mesh).  These rules machine-check the axis contracts the
+equivalence suite can only spot-check dynamically:
+
+* RPL601 ``collective-axis-unbound``: every ``lax.psum`` /
+  ``psum_scatter`` / ``all_gather`` / ``axis_index`` / ... axis name
+  must be bound by the enclosing ``shard_map`` mesh.  Mesh axes resolve
+  cross-file through ``launch/mesh.py``: the ``MESHES`` registry (named
+  meshes), the factory signatures (``make_nodes_mesh`` -> ``nodes``,
+  ``make_hybrid_mesh`` -> ``nodes``/``model``, ``make_production_mesh``
+  -> ``pod``/``data``/``model``), and the union of all axis tuples as
+  the repo-wide vocabulary fallback when the local mesh expression is
+  not statically resolvable.
+* RPL602 ``eq7-merge-axis``: inside the Eq. 7 merge scope (``core/
+  gwu.py``, or any function whose name mentions ``gwu``) reduction
+  collectives must run over ``nodes`` ONLY — a ``psum(..., "model")``
+  there would average the per-node replicas *within* one node's model
+  shards and silently break Eq. 7's cross-node weighted merge.
+* RPL603 ``partitionspec-hygiene``: ``PartitionSpec`` literals whose
+  axis names are not in the mesh vocabulary flag everywhere; specs with
+  literal axes that are NOT attached to a mesh-consuming op
+  (``NamedSharding`` / ``shard_map`` / ``with_sharding_constraint`` /
+  ``device_put``), directly or via a local name, must live in the spec
+  owner modules (``core/planner.py``, ``launch/sharding.py``) — orphan
+  specs elsewhere drift from the planner's layout decisions.
+* RPL604 ``unregistered-pytree``: a module-local dataclass constructed
+  inside trace-reachable code (the RPL201 reachability machinery, which
+  seeds from jit/shard_map/pallas_call/checkpoint wrapping) must be
+  registered with the pytree registry, else jax treats the instance as
+  a static leaf (hash by id -> silent retrace per instance) or rejects
+  it outright.
+* RPL605 ``pallas-in-shardmap``: a ``shard_map`` whose body reaches a
+  ``pallas_call`` (inline or via an intra-module def) must pass an
+  explicit ``check_rep=False`` — the shard_map replication checker has
+  no rule for Pallas kernels and rejects the round at trace time; the
+  explicit keyword documents that the equivalence suite gates the
+  semantics instead.
+
+Honesty notes (mirroring the RPL201 contract): reachability and name
+resolution are per-module and name-based; axis names that are not
+statically resolvable (function parameters without defaults, attribute
+reads like ``plan.axis``) are skipped, not guessed.  Suppress with
+``# reprolint: disable=RPL60x`` where a flagged site is deliberate,
+and say why on the line.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..engine import FileContext, Project, Rule, const_str, terminal_name
+from .trace import _ModuleTraceIndex, _own_body, _wrapped_fn_names
+
+MESH_MODULE = "launch/mesh.py"
+
+# fallback vocabulary when no mesh module is in reach (fixture projects)
+DEFAULT_AXES = frozenset({"nodes", "model", "data", "pod"})
+
+COLLECTIVES = frozenset({
+    "psum", "pmean", "pmax", "pmin", "psum_scatter", "all_gather",
+    "all_to_all", "ppermute", "pshuffle", "pbroadcast", "axis_index",
+})
+REDUCTIONS = COLLECTIVES - {"axis_index"}
+
+# positional index of the axis-name argument (default 1: psum(x, axis))
+_AXIS_POS = {"axis_index": 0}
+
+# mesh factories in launch/mesh.py and the axes their meshes carry
+MESH_FACTORY_AXES = {
+    "make_nodes_mesh": frozenset({"nodes"}),
+    "make_hybrid_mesh": frozenset({"nodes", "model"}),
+    "make_production_mesh": frozenset({"pod", "data", "model"}),
+}
+
+# modules allowed to own orphan PartitionSpecs (RPL603)
+SPEC_OWNERS = ("core/planner.py", "launch/sharding.py")
+
+# calls that "ship" a spec with a mesh — a spec inside one is attached
+SHIPPING_CALLS = frozenset({
+    "NamedSharding", "shard_map", "with_sharding_constraint", "device_put",
+})
+
+# pytree registration entry points (RPL604)
+REGISTER_CALLS = frozenset({
+    "register_dataclass", "register_pytree_node",
+    "register_pytree_node_class", "register_static",
+    "register_pytree_with_keys", "register_pytree_with_keys_class",
+})
+
+
+# ----------------------------------------------------------------------
+# mesh-axis resolution (shared by RPL601/602/603)
+# ----------------------------------------------------------------------
+def _string_tuple(node: ast.AST) -> Optional[tuple]:
+    """A tuple literal whose elements are all string constants — the
+    shape every mesh axis tuple in launch/mesh.py takes."""
+    if (isinstance(node, ast.Tuple) and node.elts
+            and all(isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    for e in node.elts)):
+        return tuple(e.value for e in node.elts)
+    return None
+
+
+def _mesh_registry(project: Project):
+    """(vocabulary, {mesh_name: axes}) resolved from ``launch/mesh.py``.
+
+    The vocabulary is the union of every axis tuple in the mesh module
+    (``MESHES`` values, factory literals, ``data_axes`` filters); named
+    meshes come from the ``MESHES = {...}`` dict literal.  Falls back to
+    ``DEFAULT_AXES`` when the module is out of reach.  Cached on the
+    project.
+    """
+    cached = getattr(project, "_shardcheck_meshes", None)
+    if cached is not None:
+        return cached
+    vocab: set = set()
+    named: dict = {}
+    ctx = project.find(MESH_MODULE)
+    if ctx is not None and ctx.tree is not None:
+        for node in ast.walk(ctx.tree):
+            axes = _string_tuple(node)
+            if axes:
+                vocab.update(axes)
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "MESHES"
+                    and isinstance(node.value, ast.Dict)):
+                for k, v in zip(node.value.keys, node.value.values):
+                    name = const_str(k) if k is not None else None
+                    if (name and isinstance(v, ast.Tuple)
+                            and len(v.elts) == 2):
+                        axes = _string_tuple(v.elts[1])
+                        if axes:
+                            named[name] = frozenset(axes)
+    if not vocab:
+        vocab = set(DEFAULT_AXES)
+    out = (frozenset(vocab), named)
+    project._shardcheck_meshes = out
+    return out
+
+
+def _assign_map(tree: ast.AST) -> dict:
+    """name -> RHS nodes of every single-target assignment (module or
+    function scope; same-named bindings merge, and a name with more than
+    one binding resolves to nothing — conservative)."""
+    out: dict = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            out.setdefault(node.targets[0].id, []).append(node.value)
+    return out
+
+
+def _mesh_axes_of(expr: Optional[ast.AST], assigns: dict,
+                  named: dict) -> Optional[frozenset]:
+    """Static axes of a mesh expression, or None when unresolvable
+    (factory call, ``make_mesh("name")``, ``Mesh(devs, ("a","b"))``, or
+    a name with a unique local binding to one of those)."""
+    if isinstance(expr, ast.Call):
+        tn = terminal_name(expr.func)
+        if tn in MESH_FACTORY_AXES:
+            return MESH_FACTORY_AXES[tn]
+        if tn == "make_mesh" and expr.args:
+            name = const_str(expr.args[0])
+            if name in named:
+                return named[name]
+        if tn == "Mesh":
+            for a in list(expr.args) + [kw.value for kw in expr.keywords]:
+                axes = _string_tuple(a)
+                if axes:
+                    return frozenset(axes)
+    elif isinstance(expr, ast.Name):
+        rhs = assigns.get(expr.id)
+        if rhs is not None and len(rhs) == 1 \
+                and not isinstance(rhs[0], ast.Name):
+            return _mesh_axes_of(rhs[0], {}, named)
+    return None
+
+
+def _enclosing_map(tree: ast.AST) -> dict:
+    """node -> innermost enclosing FunctionDef (None at module level)."""
+    enc: dict = {}
+
+    def visit(node, cur):
+        for child in ast.iter_child_nodes(node):
+            enc[child] = cur
+            nxt = child if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef)) else cur
+            visit(child, nxt)
+
+    visit(tree, None)
+    return enc
+
+
+def _param_default(fn: ast.AST, name: str) -> Optional[ast.AST]:
+    """The default expression for parameter ``name`` of ``fn``."""
+    a = fn.args
+    pos = list(a.posonlyargs) + list(a.args)
+    # defaults tail-align with the positional parameters
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        if p.arg == name:
+            return d
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if p.arg == name and d is not None:
+            return d
+    return None
+
+
+def _axis_names(expr: ast.AST, fn: Optional[ast.AST],
+                assigns: dict) -> list:
+    """Statically resolvable axis-name strings in a collective's axis
+    argument; [] when unresolvable (parameters without defaults,
+    ``plan.axis`` attribute reads — conservative skip, not a guess)."""
+    s = const_str(expr)
+    if s is not None:
+        return [s]
+    if isinstance(expr, ast.Tuple):
+        out = []
+        for e in expr.elts:
+            out.extend(_axis_names(e, fn, assigns))
+        return out
+    if isinstance(expr, ast.Name):
+        if fn is not None:
+            d = _param_default(fn, expr.id)
+            if d is not None:
+                return _axis_names(d, None, assigns)
+        rhs = assigns.get(expr.id)
+        if rhs is not None and len(rhs) == 1:
+            s = const_str(rhs[0])
+            if s is not None:
+                return [s]
+    return []
+
+
+def _collective_name(call: ast.Call) -> Optional[str]:
+    """The collective's name when ``call`` is a bare or lax-qualified
+    collective (``psum(...)``, ``lax.psum``, ``jax.lax.psum``) — method
+    calls like ``self.psum`` do not count."""
+    tn = terminal_name(call.func)
+    if tn not in COLLECTIVES:
+        return None
+    f = call.func
+    if isinstance(f, ast.Name):
+        return tn
+    if isinstance(f, ast.Attribute) and terminal_name(f.value) == "lax":
+        return tn
+    return None
+
+
+def _axis_arg(call: ast.Call, cname: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "axis_name":
+            return kw.value
+    pos = _AXIS_POS.get(cname, 1)
+    return call.args[pos] if len(call.args) > pos else None
+
+
+class _ShardMapScopes:
+    """Per-module map: function def -> axes of the shard_map mesh whose
+    body reaches it (None = reached by a shard_map whose mesh is not
+    statically resolvable — treat as the global vocabulary).
+
+    Reachability mirrors ``_ModuleTraceIndex``: seed from the wrapped
+    function argument, close over intra-module name references and
+    nested defs.  A def reached by several shard_maps is allowed the
+    union of their axes.
+    """
+
+    def __init__(self, ctx: FileContext, named: dict):
+        idx = _ModuleTraceIndex(ctx.tree)
+        assigns = _assign_map(ctx.tree)
+        self.fn_axes: dict = {}
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and terminal_name(node.func) == "shard_map"):
+                continue
+            mesh_expr = None
+            for kw in node.keywords:
+                if kw.arg == "mesh":
+                    mesh_expr = kw.value
+            if mesh_expr is None and len(node.args) >= 2:
+                mesh_expr = node.args[1]
+            axes = _mesh_axes_of(mesh_expr, assigns, named)
+            reach: set = set()
+            if node.args:
+                for fname in _wrapped_fn_names(node.args[0]):
+                    reach.update(idx._resolve(fname))
+            work = list(reach)
+            while work:
+                fn = work.pop()
+                for n in ast.walk(fn):
+                    if isinstance(n, ast.Name):
+                        for d in idx._resolve(n.id):
+                            if d not in reach:
+                                reach.add(d)
+                                work.append(d)
+                    elif (n is not fn and n in idx.qualname
+                            and n not in reach):
+                        reach.add(n)
+                        work.append(n)
+            for d in reach:
+                if d not in self.fn_axes:
+                    self.fn_axes[d] = axes
+                elif self.fn_axes[d] is None or axes is None:
+                    self.fn_axes[d] = None
+                else:
+                    self.fn_axes[d] = frozenset(self.fn_axes[d] | axes)
+
+
+def _binding_axes(fn: Optional[ast.AST], scopes: _ShardMapScopes,
+                  enc: dict, vocab: frozenset):
+    """(allowed_axes, bound) for a call site: the innermost enclosing
+    def a shard_map reaches decides; otherwise the global vocabulary
+    (bound=False -> the site is outside any resolvable shard_map)."""
+    d = fn
+    while d is not None:
+        if d in scopes.fn_axes:
+            axes = scopes.fn_axes[d]
+            return (vocab, False) if axes is None else (axes, True)
+        d = enc.get(d)
+    return vocab, False
+
+
+# ----------------------------------------------------------------------
+# RPL601
+# ----------------------------------------------------------------------
+class CollectiveAxisRule(Rule):
+    """Collective axis names must be bound by the enclosing shard_map
+    mesh (resolved through launch/mesh.py), or at minimum exist in the
+    repo's mesh-axis vocabulary."""
+    id = "RPL601"
+    name = "collective-axis-unbound"
+    description = ("lax collective axis names must be bound by the "
+                   "enclosing shard_map mesh (launch/mesh.py vocabulary)")
+
+    def check(self, ctx: FileContext,
+              project: Project) -> Iterator:
+        vocab, named = _mesh_registry(project)
+        scopes = _ShardMapScopes(ctx, named)
+        enc = _enclosing_map(ctx.tree)
+        assigns = _assign_map(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = _collective_name(node)
+            if cname is None:
+                continue
+            arg = _axis_arg(node, cname)
+            if arg is None:
+                continue
+            fn = enc.get(node)
+            allowed, bound = _binding_axes(fn, scopes, enc, vocab)
+            for nm in _axis_names(arg, fn, assigns):
+                if nm not in allowed:
+                    where = (f"the enclosing shard_map mesh "
+                             f"(axes {sorted(allowed)})" if bound else
+                             f"any repo mesh (vocabulary {sorted(vocab)})")
+                    yield self.finding(
+                        ctx, node,
+                        f"`{cname}` over axis '{nm}' is not bound by "
+                        f"{where}")
+
+
+# ----------------------------------------------------------------------
+# RPL602
+# ----------------------------------------------------------------------
+class Eq7MergeAxisRule(Rule):
+    """The Eq. 7 merge reduces over ``nodes`` only: a reduction
+    collective over any other axis inside the GWU merge scope silently
+    merges the wrong groups on a hybrid mesh."""
+    id = "RPL602"
+    name = "eq7-merge-axis"
+    description = ("reduction collectives in the Eq. 7 merge scope "
+                   "(core/gwu.py, *gwu* functions) must psum over "
+                   "'nodes', never 'model'")
+
+    def check(self, ctx: FileContext,
+              project: Project) -> Iterator:
+        in_gwu_module = ctx.path.endswith("core/gwu.py")
+        enc = _enclosing_map(ctx.tree)
+        assigns = _assign_map(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = _collective_name(node)
+            if cname is None or cname not in REDUCTIONS:
+                continue
+            fn = enc.get(node)
+            scoped = in_gwu_module
+            d = fn
+            while d is not None and not scoped:
+                scoped = "gwu" in d.name.lower()
+                d = enc.get(d)
+            if not scoped:
+                continue
+            arg = _axis_arg(node, cname)
+            if arg is None:
+                continue
+            for nm in _axis_names(arg, fn, assigns):
+                if nm != "nodes":
+                    yield self.finding(
+                        ctx, node,
+                        f"Eq. 7 merge `{cname}` reduces over '{nm}' — "
+                        "the weighted merge is a cross-node collective "
+                        "and must reduce over 'nodes' only")
+
+
+# ----------------------------------------------------------------------
+# RPL603
+# ----------------------------------------------------------------------
+def _is_test_path(path: str) -> bool:
+    parts = path.split("/")
+    base = parts[-1]
+    return ("tests" in parts or base.startswith("test_")
+            or base == "conftest.py")
+
+
+class PartitionSpecHygieneRule(Rule):
+    """PartitionSpec literal axes must exist in the mesh vocabulary, and
+    orphan specs (not attached to a mesh-consuming op) belong to the
+    spec owner modules."""
+    id = "RPL603"
+    name = "partitionspec-hygiene"
+    description = ("PartitionSpec axes must be mesh-vocabulary names; "
+                   "orphan literal specs only in core/planner.py / "
+                   "launch/sharding.py")
+
+    def check(self, ctx: FileContext,
+              project: Project) -> Iterator:
+        vocab, named = _mesh_registry(project)
+        tree = ctx.tree
+        # names bound to the PartitionSpec constructor in this module
+        aliases = {"PartitionSpec"}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    if a.name == "PartitionSpec":
+                        aliases.add(a.asname or a.name)
+            elif (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and terminal_name(node.value) == "PartitionSpec"):
+                aliases.add(node.targets[0].id)
+
+        def is_spec_call(n):
+            return (isinstance(n, ast.Call)
+                    and terminal_name(n.func) in aliases)
+
+        # specs shipped with a mesh: inside a shipping call's subtree,
+        # or assigned to a name that a shipping call references
+        shipped: set = set()
+        shipped_names: set = set()
+        shard_axes: dict = {}    # spec call -> resolvable shard_map axes
+        assigns = _assign_map(tree)
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and terminal_name(node.func) in SHIPPING_CALLS):
+                continue
+            axes = None
+            if terminal_name(node.func) == "shard_map":
+                mesh_expr = None
+                for kw in node.keywords:
+                    if kw.arg == "mesh":
+                        mesh_expr = kw.value
+                if mesh_expr is None and len(node.args) >= 2:
+                    mesh_expr = node.args[1]
+                axes = _mesh_axes_of(mesh_expr, assigns, named)
+            for sub in ast.walk(node):
+                if sub is not node and is_spec_call(sub):
+                    shipped.add(sub)
+                    if axes is not None:
+                        shard_axes[sub] = axes
+                elif isinstance(sub, ast.Name):
+                    shipped_names.add(sub.id)
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id in shipped_names
+                    and is_spec_call(node.value)):
+                shipped.add(node.value)
+
+        owner = any(ctx.path.endswith(o) for o in SPEC_OWNERS)
+        for node in ast.walk(tree):
+            if not is_spec_call(node):
+                continue
+            literals = []
+            for a in node.args:
+                s = const_str(a)
+                if s is not None:
+                    literals.append(s)
+                else:
+                    t = _string_tuple(a)
+                    if t:
+                        literals.extend(t)
+            if not literals:        # P(), P(*dyn), P(None, ...) — nothing
+                continue            # statically checkable
+            allowed = shard_axes.get(node, vocab)
+            for nm in literals:
+                if nm not in allowed:
+                    yield self.finding(
+                        ctx, node,
+                        f"PartitionSpec axis '{nm}' is not in the mesh "
+                        f"axes {sorted(allowed)}")
+            # orphan ownership: fixtures in tests/ construct specs on
+            # purpose, so only axis validation applies there
+            if (not owner and not _is_test_path(ctx.path)
+                    and node not in shipped):
+                yield self.finding(
+                    ctx, node,
+                    "literal PartitionSpec not attached to any mesh-"
+                    "consuming op (NamedSharding/shard_map/"
+                    "with_sharding_constraint/device_put) — orphan "
+                    "specs belong in core/planner.py or "
+                    "launch/sharding.py")
+
+
+# ----------------------------------------------------------------------
+# RPL604
+# ----------------------------------------------------------------------
+def _dataclass_defs(tree: ast.AST) -> dict:
+    """name -> ClassDef for module-local @dataclass classes."""
+    out: dict = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if terminal_name(target) == "dataclass":
+                out[node.name] = node
+    return out
+
+
+def _registered_names(tree: ast.AST) -> set:
+    """Class names registered with the pytree registry in this module
+    (register_* call arguments or class decorators)."""
+    out: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and terminal_name(node.func) in REGISTER_CALLS:
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    out.add(a.id)
+        elif isinstance(node, ast.ClassDef):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if terminal_name(target) in REGISTER_CALLS:
+                    out.add(node.name)
+    return out
+
+
+class UnregisteredPytreeRule(Rule):
+    """Dataclasses crossing a jit/shard_map/checkpoint boundary must be
+    pytree-registered, else jax hashes the instance as a static leaf
+    (silent per-instance retrace) or rejects it."""
+    id = "RPL604"
+    name = "unregistered-pytree"
+    description = ("module-local dataclasses constructed in trace-"
+                   "reachable code must be pytree-registered "
+                   "(register_dataclass & friends)")
+
+    def check(self, ctx: FileContext,
+              project: Project) -> Iterator:
+        dcs = _dataclass_defs(ctx.tree)
+        if not dcs:
+            return
+        unregistered = set(dcs) - _registered_names(ctx.tree)
+        if not unregistered:
+            return
+        idx = _ModuleTraceIndex(ctx.tree)
+        for fn in sorted(idx.traced, key=lambda f: f.lineno):
+            q = idx.qualname[fn]
+            for node in _own_body(fn):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id in unregistered):
+                    yield self.finding(
+                        ctx, node,
+                        f"dataclass `{node.func.id}` is constructed "
+                        f"inside `{q}` (trace-reachable) but never "
+                        "pytree-registered — register it with "
+                        "jax.tree_util.register_dataclass")
+
+
+# ----------------------------------------------------------------------
+# RPL605
+# ----------------------------------------------------------------------
+class PallasInShardMapRule(Rule):
+    """shard_map over a Pallas kernel needs explicit check_rep=False:
+    the replication checker has no rule for pallas_call and rejects the
+    program at trace time."""
+    id = "RPL605"
+    name = "pallas-in-shardmap"
+    description = ("shard_map bodies reaching pallas_call must pass "
+                   "check_rep=False explicitly")
+
+    @staticmethod
+    def _has_pallas(node: ast.AST) -> bool:
+        return any(isinstance(n, ast.Call)
+                   and terminal_name(n.func) == "pallas_call"
+                   for n in ast.walk(node))
+
+    def check(self, ctx: FileContext,
+              project: Project) -> Iterator:
+        idx = _ModuleTraceIndex(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and terminal_name(node.func) == "shard_map"
+                    and node.args):
+                continue
+            # inline bodies plus intra-module defs the body reaches
+            pallas = self._has_pallas(node.args[0])
+            if not pallas:
+                reach: set = set()
+                for fname in _wrapped_fn_names(node.args[0]):
+                    reach.update(idx._resolve(fname))
+                work = list(reach)
+                while work and not pallas:
+                    fn = work.pop()
+                    if self._has_pallas(fn):
+                        pallas = True
+                        break
+                    for n in ast.walk(fn):
+                        if isinstance(n, ast.Name):
+                            for d in idx._resolve(n.id):
+                                if d not in reach:
+                                    reach.add(d)
+                                    work.append(d)
+            if not pallas:
+                continue
+            check_rep = None
+            for kw in node.keywords:
+                if kw.arg == "check_rep":
+                    check_rep = kw.value
+            ok = (isinstance(check_rep, ast.Constant)
+                  and check_rep.value is False)
+            if not ok:
+                yield self.finding(
+                    ctx, node,
+                    "shard_map body reaches a pallas_call but does not "
+                    "pass check_rep=False — the replication checker "
+                    "rejects Pallas kernels at trace time")
